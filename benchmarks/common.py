@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: build cache and CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+_BUILT = {}
+
+# Event cap for the cycle simulator: the big GEMM/conv traces are periodic,
+# so a multi-million-event prefix gives the same rates; cycle totals are
+# scaled by the prefix ratio (exact for steady-state traces).
+MAX_EVENTS = 1_500_000
+
+
+def built(name):
+    """Build (and cache) a paper-size benchmark trace."""
+    from repro import rvv
+    if name not in _BUILT:
+        b = rvv.BENCHMARKS[name]
+        _BUILT[name] = b.build(**b.paper_params)
+    return _BUILT[name]
+
+
+def events_for(name):
+    from repro.core import events
+    key = ("ev", name)
+    if key not in _BUILT:
+        _BUILT[key] = events.expand(built(name).program)
+    return _BUILT[key]
+
+
+def emit(rows: list[dict], header: list[str]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

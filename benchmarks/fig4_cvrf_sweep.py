@@ -1,0 +1,40 @@
+"""Fig 4: (a) performance of cVRF sizes 3..16 normalised to the full VRF and
+(b) cVRF hit rates, for every benchmark application (FIFO, as the paper)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import simulator
+
+CAPS = list(range(3, 17))
+
+
+def run(names=None, max_events=common.MAX_EVENTS) -> list[dict]:
+    rows = []
+    for name in names or rvv.BENCHMARKS:
+        t0 = time.time()
+        ev = common.events_for(name)
+        sweep = simulator.SweepConfig.make(CAPS + [32])
+        out = simulator.simulate_sweep(ev, sweep, max_events=max_events)
+        full = float(out["cycles"][-1])
+        for i, cap in enumerate(CAPS):
+            rows.append(dict(
+                name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
+                capacity=cap,
+                norm_perf=round(full / float(out["cycles"][i]), 4),
+                hit_rate=round(float(out["hit_rate"][i]), 4),
+                spills=int(out["spills"][i]), fills=int(out["fills"][i]),
+            ))
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "capacity", "norm_perf",
+                        "hit_rate", "spills", "fills"])
+
+
+if __name__ == "__main__":
+    main()

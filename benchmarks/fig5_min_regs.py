@@ -1,0 +1,42 @@
+"""Fig 5: minimum cVRF capacity for a >95% hit rate, per application.
+Paper's claim: 8 registers suffice for (almost) all; FlashAttention-2 needs
+only 3 despite touching all 32 architectural registers."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import planner
+
+PAPER_MIN = {  # read off the paper's Fig 5
+    "pathfinder": 6, "jacobi2d": 7, "somier": 8, "gemv": 5, "dropout": 3,
+    "conv2d_7x7": 8, "densenet121_l105": 3, "resnet50_l10": 3,
+    "flashattention2": 3,
+}
+
+
+def run(max_events=common.MAX_EVENTS) -> list[dict]:
+    rows = []
+    for name in rvv.BENCHMARKS:
+        t0 = time.time()
+        built = common.built(name)
+        res = planner.min_registers_for_hit_rate(
+            built.program, target=0.95, max_events=max_events)
+        rows.append(dict(
+            name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
+            min_regs=res.min_capacity, paper_min=PAPER_MIN.get(name, ""),
+            active_regs=res.active_regs,
+            hit_at_min=round(res.hit_rates.get(res.min_capacity, 0.0), 4),
+        ))
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "min_regs", "paper_min",
+                        "active_regs", "hit_at_min"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Fig 6: equal-area comparison — Register Dispersion (cVRF of 8 x 256-bit)
+vs a full 32-register VRF of reduced 64-bit vector length.
+
+The narrow machine is modelled from the wide-machine simulation counters:
+with VL/4, every vector instruction strip-mines into 4 (4x base-occupancy
+and 4x loop overhead), while each 32-byte cacheline is now touched by four
+8-byte accesses (1 miss + 3 extra hits per previously-missed line); the
+narrow VRF holds all 32 registers so it has no dispersion stalls.  All
+results are normalised to the full-size 32 x 256-bit VRF.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import simulator
+
+
+def narrow_cycles(full: dict) -> float:
+    """Cycles for the 32-reg x 64-bit VRF machine from wide-VRF counters."""
+    l1_hits = float(full["l1_hits"])
+    l1_miss = float(full["l1_misses"])
+    mem_cycles = l1_hits * 1 + l1_miss * (1 + 5)
+    compute_cycles = float(full["cycles"]) - mem_cycles
+    # 4x strip-mine on compute/overhead; 4x accesses on memory, same misses.
+    naccess = (l1_hits + l1_miss) * 4
+    return 4.0 * compute_cycles + (naccess - l1_miss) * 1 + l1_miss * (1 + 5)
+
+
+def run(max_events=common.MAX_EVENTS) -> list[dict]:
+    rows = []
+    for name in rvv.BENCHMARKS:
+        t0 = time.time()
+        ev = common.events_for(name)
+        sweep = simulator.SweepConfig.make([8, 32])
+        out = simulator.simulate_sweep(ev, sweep, max_events=max_events)
+        cvrf8 = float(out["cycles"][0])
+        full = float(out["cycles"][1])
+        narrow = narrow_cycles({k: v[1] for k, v in out.items()})
+        rows.append(dict(
+            name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
+            dispersion_8x256=round(full / cvrf8, 3),
+            narrow_32x64=round(full / narrow, 3),
+            advantage=round(narrow / cvrf8, 2),
+        ))
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "dispersion_8x256",
+                        "narrow_32x64", "advantage"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig 8: per-application average power — full VRF vs cVRF-8 with Register
+Dispersion (activity-based model over simulator counters). Paper: ~10%
+average CPU+VPU power saving."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import costmodel, simulator
+
+
+def run(max_events=common.MAX_EVENTS) -> list[dict]:
+    rows = []
+    savings = []
+    for name in rvv.BENCHMARKS:
+        t0 = time.time()
+        ev = common.events_for(name)
+        sweep = simulator.SweepConfig.make([8, 32])
+        out = simulator.simulate_sweep(ev, sweep, max_events=max_events)
+        c8 = {k: float(v[0]) for k, v in out.items()}
+        c32 = {k: float(v[1]) for k, v in out.items()}
+        p8 = costmodel.application_power(c8, 8, c8["cycles"], dispersed=True)
+        p32 = costmodel.application_power(c32, 32, c32["cycles"])
+        save = 100 * (1 - p8["total"] / p32["total"])
+        savings.append(save)
+        rows.append(dict(
+            name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
+            power_full=round(p32["total"], 2),
+            power_cvrf8=round(p8["total"], 2),
+            saving_pct=round(save, 1),
+        ))
+    rows.append(dict(name="AVERAGE", us_per_call=0.0,
+                     power_full="", power_cvrf8="",
+                     saving_pct=round(sum(savings) / len(savings), 1),
+                     paper_saving=10.0))
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "power_full", "power_cvrf8",
+                        "saving_pct", "paper_saving"])
+
+
+if __name__ == "__main__":
+    main()

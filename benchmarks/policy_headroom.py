@@ -1,0 +1,50 @@
+"""Beyond-paper: replacement-policy headroom — FIFO (paper) vs LRU / LFU /
+Belady-OPT hit rates, plus the allocate-no-fetch write optimisation.
+
+OPT upper-bounds any realizable policy; the FIFO->OPT gap quantifies what
+the paper's simplicity choice leaves on the table (§5 of EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import policies, simulator
+
+CAPS = (4, 6, 8)
+APPS = ("pathfinder", "jacobi2d", "gemv", "somier", "conv2d_7x7",
+        "flashattention2")
+
+
+def run(max_events=common.MAX_EVENTS) -> list[dict]:
+    rows = []
+    for name in APPS:
+        t0 = time.time()
+        ev = common.events_for(name)
+        for cap in CAPS:
+            row = dict(name=name, capacity=cap,
+                       us_per_call=round((time.time() - t0) * 1e6, 1))
+            for pol in (policies.FIFO, policies.LRU, policies.LFU,
+                        policies.OPT):
+                out = simulator.simulate_one(ev, cap, pol,
+                                             max_events=max_events)
+                row[policies.POLICY_NAMES[pol]] = round(
+                    float(out["hit_rate"]), 4)
+                if pol == policies.FIFO:
+                    row["fifo_cycles"] = int(out["cycles"])
+            anf = simulator.simulate_one(ev, cap, policies.FIFO, True,
+                                         max_events=max_events)
+            row["fifo_no_fetch_cycles"] = int(anf["cycles"])
+            rows.append(row)
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "capacity", "fifo", "lru",
+                        "lfu", "opt", "fifo_cycles",
+                        "fifo_no_fetch_cycles"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Markdown report generator for EXPERIMENTS.md tables (dry-run + roofline).
+
+  PYTHONPATH=src:. python -m benchmarks.report results/dryrun        # baseline
+  PYTHONPATH=src:. python -m benchmarks.report results/dryrun_opt   # optimized
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.configs import SHAPES, get
+from repro.launch import analytic
+
+
+def load(d, mesh):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(d, f"*_{mesh}.json"))):
+        try:
+            cells.extend(json.load(open(f)))
+        except Exception:
+            pass
+    return cells
+
+
+def dryrun_table(d):
+    print("| arch | shape | 16x16 | 2x16x16 | mem GB/dev | fits 16G | "
+          "compile s |")
+    print("|---|---|---|---|---|---|---|")
+    single = {(c["arch"], c["shape"]): c for c in load(d, "single")}
+    multi = {(c["arch"], c["shape"]): c for c in load(d, "multi")}
+    for key in sorted(single):
+        s, m = single[key], multi.get(key, {})
+        if s["status"] == "skip":
+            print(f"| {key[0]} | {key[1]} | skip* | skip* | — | — | — |")
+            continue
+        print(f"| {key[0]} | {key[1]} | {s['status']} "
+              f"| {m.get('status', '?')} "
+              f"| {s.get('bytes_per_device', 0) / 1e9:.1f} "
+              f"| {'yes' if s.get('fits_16g') else 'NO'} "
+              f"| {s.get('compile_s', 0):.0f} |")
+
+
+def roofline_table(d):
+    print("| arch/shape | t_comp ms | t_mem ms | t_coll ms | bottleneck | "
+          "roofline frac | MFU ub | useful ratio | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in load(d, "single"):
+        if c["status"] != "ok":
+            continue
+        cfg = get(c["arch"])
+        shape = SHAPES[c["shape"]]
+        t = analytic.roofline_terms(c, cfg, shape)
+        coll = (c.get("collectives") or {}).get("collective_bytes", 0)
+        print(f"| {c['arch']}/{c['shape']} "
+              f"| {t['t_compute'] * 1e3:.1f} | {t['t_memory'] * 1e3:.1f} "
+              f"| {t['t_collective'] * 1e3:.1f} | {t['bottleneck']} "
+              f"| {t['roofline_fraction']:.3f} "
+              f"| {t['mfu_upper_bound']:.3f} "
+              f"| {t['useful_flop_ratio']:.2f} | {coll / 1e9:.1f} |")
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    which = sys.argv[2] if len(sys.argv) > 2 else "both"
+    if which in ("both", "dryrun"):
+        dryrun_table(d)
+    if which in ("both", "roofline"):
+        print()
+        roofline_table(d)

@@ -1,0 +1,70 @@
+"""Roofline table over the dry-run sweep (results/dryrun/*.json).
+
+Per (arch x shape) on the single-pod mesh: the three roofline terms in
+seconds, the dominant bottleneck, MODEL_FLOPS (6ND / 6N_active*D + attention
+term), the useful-FLOP ratio, and the roofline fraction
+(t_compute / max(all terms)).  See EXPERIMENTS.md §Roofline for the analysis
+and §Perf for the hillclimbing log driven by this table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+from repro.configs import ARCHS, SHAPES, get
+from repro.launch import analytic
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}.json"))):
+        try:
+            cells.extend(json.load(open(f)))
+        except Exception:
+            pass
+    return cells
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for cell in load_cells(mesh):
+        name = f"{cell['arch']}/{cell['shape']}"
+        if cell["status"] == "skip":
+            rows.append(dict(name=name, us_per_call=0.0, status="skip"))
+            continue
+        if cell["status"] != "ok":
+            rows.append(dict(name=name, us_per_call=0.0, status="error"))
+            continue
+        cfg = get(cell["arch"])
+        shape = SHAPES[cell["shape"]]
+        t = analytic.roofline_terms(cell, cfg, shape)
+        rows.append(dict(
+            name=name, us_per_call=0.0, status="ok",
+            t_compute_ms=round(t["t_compute"] * 1e3, 3),
+            t_memory_ms=round(t["t_memory"] * 1e3, 3),
+            t_mem_ub_ms=round(t["t_memory_opbytes_ub"] * 1e3, 3),
+            t_collective_ms=round(t["t_collective"] * 1e3, 3),
+            bottleneck=t["bottleneck"],
+            roofline_frac=round(t["roofline_fraction"], 3),
+            useful_flop_ratio=round(t["useful_flop_ratio"], 3),
+            mem_gb_per_dev=round(cell.get("bytes_per_device", 0) / 1e9, 2),
+            fits_16g=cell.get("fits_16g", ""),
+        ))
+    return rows
+
+
+def main():
+    for mesh in ("single",):
+        print(f"# mesh={mesh}")
+        common.emit(run(mesh), [
+            "name", "us_per_call", "status", "t_compute_ms", "t_memory_ms",
+            "t_mem_ub_ms", "t_collective_ms", "bottleneck", "roofline_frac",
+            "useful_flop_ratio", "mem_gb_per_dev", "fits_16g"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one function per paper table/figure (+ beyond-paper
+studies).  Prints ``name,us_per_call,derived...`` CSV blocks per benchmark.
+
+  python -m benchmarks.run             # everything
+  python -m benchmarks.run table3 fig4 # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = ("table3", "fig4", "fig5", "fig6", "fig2", "fig8",
+          "policy_headroom", "vmem_dispersion", "kv_dispersion",
+          "ablation_sensitivity")
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or list(SUITES)
+    t00 = time.time()
+    for suite in args:
+        mod = {
+            "table3": "benchmarks.table3_speedup",
+            "fig4": "benchmarks.fig4_cvrf_sweep",
+            "fig5": "benchmarks.fig5_min_regs",
+            "fig6": "benchmarks.fig6_equal_area",
+            "fig2": "benchmarks.fig2_area_model",
+            "fig8": "benchmarks.fig8_power",
+            "policy_headroom": "benchmarks.policy_headroom",
+            "vmem_dispersion": "benchmarks.vmem_dispersion",
+            "kv_dispersion": "benchmarks.kv_dispersion",
+            "ablation_sensitivity": "benchmarks.ablation_sensitivity",
+        }[suite]
+        print(f"\n## {suite} ({mod})", flush=True)
+        t0 = time.time()
+        __import__(mod, fromlist=["main"]).main()
+        print(f"## {suite} done in {time.time() - t0:.1f}s", flush=True)
+    print(f"\nALL BENCHMARKS DONE in {time.time() - t00:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

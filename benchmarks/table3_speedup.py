@@ -1,0 +1,45 @@
+"""Table 3: VPU (full VRF) speedup over scalar execution, active vector
+registers, and VRF utilisation — side by side with the paper's numbers."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro import rvv
+from repro.core import isa, simulator
+
+
+def run(max_events=common.MAX_EVENTS) -> list[dict]:
+    rows = []
+    for name, b in rvv.BENCHMARKS.items():
+        t0 = time.time()
+        built = common.built(name)
+        ev = common.events_for(name)
+        scale = max(ev.num_events / max_events, 1.0)
+        out = simulator.full_vrf_baseline(ev, max_events=max_events)
+        vec_cycles = float(out["cycles"]) * scale
+        scal_cycles = b.scalar_cost(**b.paper_params).cycles()
+        paper = rvv.PAPER_TABLE3[name]
+        active = len(built.program.active_vregs())
+        rows.append(dict(
+            name=name,
+            us_per_call=round((time.time() - t0) * 1e6, 1),
+            speedup=round(scal_cycles / vec_cycles, 2),
+            paper_speedup=paper["speedup"],
+            active_regs=active, paper_active=paper["active_regs"],
+            vrf_util=round(active / isa.NUM_ARCH_VREGS, 2),
+            paper_util=paper["util"],
+            vec_cycles=int(vec_cycles), scalar_cycles=int(scal_cycles),
+        ))
+    return rows
+
+
+def main():
+    common.emit(run(), ["name", "us_per_call", "speedup", "paper_speedup",
+                        "active_regs", "paper_active", "vrf_util",
+                        "paper_util", "vec_cycles", "scalar_cycles"])
+
+
+if __name__ == "__main__":
+    main()

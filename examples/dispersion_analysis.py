@@ -1,0 +1,28 @@
+"""Beyond-paper analysis: replacement-policy headroom and the TPU VMEM
+working-set analogue.
+
+  PYTHONPATH=src python examples/dispersion_analysis.py
+"""
+
+from repro import rvv
+from repro.core import planner
+from repro.kernels import ops
+
+print("== Belady-OPT headroom over the paper's FIFO (hit rates) ==")
+b = rvv.BENCHMARKS["pathfinder"]
+built = b.build(**b.paper_params)
+res = planner.policy_headroom(built.program, capacities=(3, 4, 5, 6))
+print(f"{'cap':>4} {'fifo':>7} {'lru':>7} {'opt':>7}")
+for cap in (3, 4, 5, 6):
+    print(f"{cap:>4} {res['fifo'][cap]:7.3f} {res['lru'][cap]:7.3f} "
+          f"{res['opt'][cap]:7.3f}")
+
+print("\n== VMEM accumulator working set vs HBM traffic (granite-8b MLP) ==")
+print(f"{'W':>3} {'HBM GB':>8} {'VMEM MB':>8}   (ideal = "
+      f"{ops.hbm_traffic_model(8192, 14336, 4096, block_m=128, block_k=512, working_set=1)['ideal'] / 1e9:.1f} GB)")
+for w in (1, 2, 4, 8, 16):
+    t = ops.hbm_traffic_model(8192, 14336, 4096, block_m=128, block_k=512,
+                              working_set=w)
+    print(f"{w:>3} {t['grouped'] / 1e9:8.2f} {t['vmem_acc_bytes'] / 1e6:8.1f}")
+print("more physical 'registers' (VMEM tiles) => less memory traffic —")
+print("the paper's Fig 4 economics at the next level of the hierarchy.")

@@ -1,0 +1,8 @@
+"""Architecture + shape configs for the assigned model zoo."""
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import (ARCHS, SHAPES, ShapeConfig,
+                                    cell_runnable, get)
+
+__all__ = ["ArchConfig", "ARCHS", "SHAPES", "ShapeConfig",
+           "cell_runnable", "get"]

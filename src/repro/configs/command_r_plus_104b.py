@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import COMMAND_R_PLUS as CONFIG
+
+CONFIG = CONFIG

@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import DEEPSEEK_V2_LITE as CONFIG
+
+CONFIG = CONFIG

@@ -1,0 +1,19 @@
+"""The paper's own machine configuration (Table 1) as a config module:
+Codasip L31 (RV32IMFCB, 3-stage, 200 MHz) + 256-bit / 8-lane VPU.
+
+Used by the simulator defaults and the benchmark harness; exposed here so
+the paper target sits beside the assigned LM architectures.
+"""
+
+from repro.core.isa import (MASK_REG, NUM_ARCH_VREGS, VL_ELEMS, VLEN_BITS,
+                            VLEN_BYTES)
+from repro.core.simulator import DEFAULT_MACHINE, MachineParams
+
+L31_VPU = DEFAULT_MACHINE                 # L1D 16 KB 2-way, mem 5 cyc
+CVRF_SIZES = (3, 4, 5, 6, 7, 8, 16)       # the paper's evaluated heights
+FULL_VRF = NUM_ARCH_VREGS                 # 32 architectural registers
+PAPER_CVRF = 8                            # the headline configuration
+
+__all__ = ["L31_VPU", "CVRF_SIZES", "FULL_VRF", "PAPER_CVRF",
+           "MachineParams", "MASK_REG", "NUM_ARCH_VREGS", "VL_ELEMS",
+           "VLEN_BITS", "VLEN_BYTES"]

@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import PHI35_MOE as CONFIG
+
+CONFIG = CONFIG

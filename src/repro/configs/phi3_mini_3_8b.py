@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import PHI3_MINI as CONFIG
+
+CONFIG = CONFIG

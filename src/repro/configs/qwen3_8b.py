@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import QWEN3_8B as CONFIG
+
+CONFIG = CONFIG

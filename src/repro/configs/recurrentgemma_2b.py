@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import RECURRENTGEMMA_2B as CONFIG
+
+CONFIG = CONFIG

@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry.py for fields)."""
+
+from repro.configs.registry import WHISPER_LARGE_V3 as CONFIG
+
+CONFIG = CONFIG

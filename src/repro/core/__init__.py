@@ -1,0 +1,22 @@
+"""Register Dispersion core: the paper's contribution as composable modules.
+
+Public API:
+  trace.Assembler / trace.MemoryMap / trace.Program   — RVV-lite trace eDSL
+  interpreter.run / interpreter.run_dispersed          — functional oracles
+  simulator.simulate_sweep / simulate_one              — cycle-level cVRF model
+  policies.FIFO / LRU / LFU / OPT                      — replacement policies
+  planner.min_registers_for_hit_rate / policy_headroom — working-set planning
+  costmodel.cpu_area / application_power               — analytic 28nm model
+"""
+
+from repro.core import (costmodel, events, interpreter, isa, planner,
+                        policies, simulator, trace)
+from repro.core.simulator import (MachineParams, SweepConfig, simulate_one,
+                                  simulate_sweep)
+from repro.core.trace import Assembler, MemoryMap, Program
+
+__all__ = [
+    "costmodel", "events", "interpreter", "isa", "planner", "policies",
+    "simulator", "trace", "MachineParams", "SweepConfig", "simulate_one",
+    "simulate_sweep", "Assembler", "MemoryMap", "Program",
+]

@@ -1,0 +1,159 @@
+"""Instruction trace -> operand/memory event stream.
+
+The Register Dispersion hardware checks the (up to three) vector operands of
+an instruction *serially* in the ID stage (paper §3.2.1), then accesses the
+data cache in EX for vector loads/stores.  We therefore simulate at *event*
+granularity: each instruction expands to
+
+    [REG vs1?] [REG vs2?] [REG vd?] [MEM line0?] [MEM line1?] | [SCALAR]
+
+which makes the cycle model a uniform ``lax.scan`` over one flat stream and
+naturally reproduces the serialized miss handling of the hardware.
+
+``v0`` (the RVV mask register) is pinned in a dedicated register and never
+generates cVRF events (paper §3.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.trace import Program
+
+K_SCALAR = 0
+K_REG = 1
+K_MEM = 2
+
+NO_NEXT_USE = np.int32(2**31 - 8)
+
+
+@dataclasses.dataclass
+class EventStream:
+    kind: np.ndarray        # (E,) int8
+    reg: np.ndarray         # (E,) int32  (REG events; -1 otherwise)
+    line: np.ndarray        # (E,) int64  cacheline index (MEM events)
+    is_write: np.ndarray    # (E,) bool
+    needs_read: np.ndarray  # (E,) bool   (REG: value must be fetched on miss)
+    no_fetch_ok: np.ndarray  # (E,) bool  (REG: full overwrite, fetch skippable)
+    cost: np.ndarray        # (E,) int32  base cycles charged on this event
+    next_use: np.ndarray    # (E,) int32  next event index touching same reg
+    lock_a: np.ndarray      # (E,) int32  operand already checked -> not evictable
+    lock_b: np.ndarray      # (E,) int32  second locked operand (-1 if none)
+    spill_line0: int        # first cacheline of the reserved vreg spill region
+    num_instructions: int
+
+    @property
+    def num_events(self) -> int:
+        return int(self.kind.shape[0])
+
+
+def expand(program: Program) -> EventStream:
+    """Vectorised numpy expansion of an instruction trace into events."""
+    tbl = isa.op_table()
+    op = program.op
+    T = op.shape[0]
+    vd, vs1, vs2 = program.vd, program.vs1, program.vs2
+    addr = program.addr
+
+    r_vs1 = tbl["reads_vs1"][op]
+    r_vs2 = tbl["reads_vs2"][op]
+    r_vd = tbl["reads_vd"][op]
+    w_vd = tbl["writes_vd"][op]
+    full_ow = tbl["full_overwrite"][op]
+    is_load = tbl["is_load"][op]
+    is_store = tbl["is_store"][op]
+    base_cost = np.where(program.cost_override >= 0, program.cost_override,
+                         tbl["cost"][op]).astype(np.int32)
+
+    mask_reg = isa.MASK_REG
+    # Per-instruction event slots (order = hardware order).
+    S = 6
+    valid = np.zeros((T, S), np.bool_)
+    kind = np.zeros((T, S), np.int8)
+    reg = np.full((T, S), -1, np.int32)
+    line = np.full((T, S), -1, np.int64)
+    is_write = np.zeros((T, S), np.bool_)
+    needs_read = np.zeros((T, S), np.bool_)
+    no_fetch = np.zeros((T, S), np.bool_)
+    lock_a = np.full((T, S), -1, np.int32)
+    lock_b = np.full((T, S), -1, np.int32)
+
+    # slot 0/1: vs1 / vs2 reads.
+    for s, (r_flag, rs) in enumerate(((r_vs1, vs1), (r_vs2, vs2))):
+        v = r_flag & (rs >= 0) & (rs != mask_reg)
+        valid[:, s] = v
+        kind[:, s] = K_REG
+        reg[:, s] = rs
+        needs_read[:, s] = True
+    # Serial tag check (paper 3.2.1): vs2's miss handling must not evict the
+    # already-resolved vs1; vd's must not evict vs1 or vs2.
+    lock_a[:, 1] = np.where(valid[:, 0], vs1, -1)
+    # slot 2: vd access (read and/or write).
+    v = (r_vd | w_vd) & (vd >= 0) & (vd != mask_reg)
+    valid[:, 2] = v
+    kind[:, 2] = K_REG
+    reg[:, 2] = vd
+    is_write[:, 2] = w_vd
+    needs_read[:, 2] = r_vd
+    no_fetch[:, 2] = full_ow & w_vd & ~r_vd
+    lock_a[:, 2] = np.where(valid[:, 0], vs1, -1)
+    lock_b[:, 2] = np.where(valid[:, 1], vs2, -1)
+    # slot 3/4: data-cache lines touched by vector loads/stores.
+    is_mem = is_load | is_store
+    nbytes = np.where((op == isa.VBCAST) | (op == isa.VSES), 4,
+                  isa.VLEN_BYTES)
+    line0 = addr >> 5
+    line1 = (addr + nbytes - 1) >> 5
+    valid[:, 3] = is_mem
+    kind[:, 3] = K_MEM
+    line[:, 3] = line0
+    is_write[:, 3] = is_store
+    valid[:, 4] = is_mem & (line1 != line0)     # unaligned straddle
+    kind[:, 4] = K_MEM
+    line[:, 4] = line1
+    is_write[:, 4] = is_store
+    # slot 5: pure scalar bookkeeping.
+    valid[:, 5] = op == isa.SCALAR
+    kind[:, 5] = K_SCALAR
+
+    # Attach the instruction base cost to its first valid event.
+    cost = np.zeros((T, S), np.int32)
+    any_valid = valid.any(axis=1)
+    first = np.argmax(valid, axis=1)
+    rows = np.nonzero(any_valid)[0]
+    cost[rows, first[rows]] = base_cost[rows]
+
+    flat = valid.reshape(-1)
+    ev = EventStream(
+        kind=kind.reshape(-1)[flat],
+        reg=reg.reshape(-1)[flat],
+        line=line.reshape(-1)[flat],
+        is_write=is_write.reshape(-1)[flat],
+        needs_read=needs_read.reshape(-1)[flat],
+        no_fetch_ok=no_fetch.reshape(-1)[flat],
+        cost=cost.reshape(-1)[flat],
+        next_use=np.zeros(int(flat.sum()), np.int32),
+        lock_a=lock_a.reshape(-1)[flat],
+        lock_b=lock_b.reshape(-1)[flat],
+        spill_line0=(program.memory.nbytes + isa.VLEN_BYTES - 1)
+        // isa.VLEN_BYTES + 4,
+        num_instructions=T,
+    )
+    ev.next_use = _next_use(ev.kind, ev.reg)
+    return ev
+
+
+def _next_use(kind: np.ndarray, reg: np.ndarray) -> np.ndarray:
+    """Belady next-use indices for REG events (vectorised per register)."""
+    E = kind.shape[0]
+    nxt = np.full(E, NO_NEXT_USE, np.int32)
+    reg_idx = np.nonzero(kind == K_REG)[0]
+    regs_here = reg[reg_idx]
+    for r in np.unique(regs_here):
+        idx = reg_idx[regs_here == r]
+        if idx.size > 1:
+            nxt[idx[:-1]] = idx[1:]
+    return nxt

@@ -1,0 +1,79 @@
+"""Working-set planning on top of the cycle simulator.
+
+Turns the paper's Fig 5 analysis into an API: given a kernel's trace, find
+the minimum cVRF capacity achieving a target hit rate (the paper uses >95%),
+and quantify the headroom of smarter replacement policies (beyond-paper).
+The same planner sizes the serving layer's dispersed KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import events as ev_mod
+from repro.core import policies, simulator
+from repro.core.trace import Program
+
+
+@dataclasses.dataclass
+class PlanResult:
+    min_capacity: int
+    hit_rates: dict[int, float]            # capacity -> hit rate
+    cycles: dict[int, int]                 # capacity -> cycles
+    full_vrf_cycles: int
+    active_regs: int
+
+
+def min_registers_for_hit_rate(
+    program: Program,
+    target: float = 0.95,
+    capacities=tuple(range(3, 17)),
+    policy: int = policies.FIFO,
+    machine: simulator.MachineParams = simulator.DEFAULT_MACHINE,
+    max_events: int | None = None,
+) -> PlanResult:
+    """Smallest capacity whose operand hit rate exceeds ``target``."""
+    ev = ev_mod.expand(program)
+    caps = list(capacities) + [32]
+    sweep = simulator.SweepConfig.make(caps, policy)
+    out = simulator.simulate_sweep(ev, sweep, machine, max_events)
+    hit = {c: float(h) for c, h in zip(caps, out["hit_rate"])}
+    cyc = {c: int(x) for c, x in zip(caps, out["cycles"])}
+    ok = [c for c in capacities if hit[c] > target]
+    return PlanResult(
+        min_capacity=min(ok) if ok else max(capacities) + 1,
+        hit_rates=hit, cycles=cyc, full_vrf_cycles=cyc[32],
+        active_regs=len(program.active_vregs()),
+    )
+
+
+def policy_headroom(program: Program, capacities=tuple(range(3, 9)),
+                    max_events: int | None = None) -> dict:
+    """Hit-rate comparison FIFO vs LRU vs LFU vs OPT (beyond-paper study).
+
+    OPT (Belady) upper-bounds any realizable policy; the gap FIFO->OPT is the
+    headroom the paper left on the table by choosing the cheapest policy.
+    """
+    ev = ev_mod.expand(program)
+    out = {}
+    for pol in (policies.FIFO, policies.LRU, policies.LFU, policies.OPT):
+        sweep = simulator.SweepConfig.make(list(capacities), pol)
+        res = simulator.simulate_sweep(ev, sweep, max_events=max_events)
+        out[policies.POLICY_NAMES[pol]] = {
+            int(c): float(h) for c, h in zip(capacities, res["hit_rate"])}
+    return out
+
+
+def normalized_performance(program: Program, capacities,
+                           policy: int = policies.FIFO,
+                           max_events: int | None = None) -> dict[int, float]:
+    """Fig 4(a): performance of each capacity normalized to the full VRF
+    (1.0 = no slowdown; <1.0 = dispersion stalls hurt)."""
+    caps = list(capacities) + [32]
+    sweep = simulator.SweepConfig.make(caps, policy)
+    out = simulator.simulate_sweep(program, sweep, max_events=max_events)
+    full = float(out["cycles"][-1])
+    return {int(c): full / float(x)
+            for c, x in zip(caps[:-1], out["cycles"][:-1])}

@@ -1,0 +1,148 @@
+"""Replacement policies for compact register files / dispersed caches.
+
+The paper's cVRF uses FIFO replacement ("evict the register at the head
+pointer", §3.2.2).  We implement FIFO faithfully and add LRU, LFU-lite and
+offline-optimal (Belady/OPT) as beyond-paper headroom analyses.  The same
+victim-selection functions drive both the cycle simulator (register
+granularity) and the serving-layer dispersed KV cache (page granularity) —
+the mechanism is the paper's, the granularity is the TPU adaptation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FIFO = 0      # paper's policy: evict longest-resident entry
+LRU = 1       # evict least-recently-used
+LFU = 2       # evict least-frequently-used (ties -> oldest)
+OPT = 3       # Belady: evict entry with the farthest next use (offline)
+
+POLICY_NAMES = {FIFO: "fifo", LRU: "lru", LFU: "lfu", OPT: "opt"}
+
+INT_MAX = 2**31 - 1
+NO_NEXT_USE = 2**31 - 8   # "never used again" sentinel (fits int32)
+
+
+@dataclasses.dataclass
+class CacheState:
+    """Per-slot metadata carried through the simulation scan.
+
+    All arrays have shape (n_slots,); ``tags[i] == -1`` means slot i is free.
+    """
+
+    tags: jnp.ndarray        # int32 architectural id cached in each slot
+    dirty: jnp.ndarray       # bool  modified since fill
+    ins_seq: jnp.ndarray     # int32 insertion order   (FIFO)
+    last_use: jnp.ndarray    # int32 last access order (LRU)
+    freq: jnp.ndarray        # int32 access count      (LFU)
+    next_use: jnp.ndarray    # int32 next future use   (OPT)
+    pinned: jnp.ndarray      # bool  never evict (v0-analogue entries)
+
+    @staticmethod
+    def init(n_slots: int) -> "CacheState":
+        z32 = jnp.zeros(n_slots, jnp.int32)
+        return CacheState(
+            tags=jnp.full(n_slots, -1, jnp.int32),
+            dirty=jnp.zeros(n_slots, bool),
+            ins_seq=z32, last_use=z32, freq=z32, next_use=z32,
+            pinned=jnp.zeros(n_slots, bool),
+        )
+
+
+jax.tree_util.register_dataclass(
+    CacheState,
+    data_fields=["tags", "dirty", "ins_seq", "last_use", "freq", "next_use",
+                 "pinned"],
+    meta_fields=[],
+)
+
+
+def select_victim(state: CacheState, policy, valid_mask,
+                  lock_a=-1, lock_b=-1) -> jnp.ndarray:
+    """Index of the slot to evict among occupied, unpinned, in-capacity slots.
+
+    ``policy`` may be a traced int32 scalar; all four metrics are computed and
+    the requested one selected (cheap: slots <= 32/first-level pages).
+    ``lock_a``/``lock_b``: tags that must not be evicted (operands of the
+    in-flight instruction that were already tag-checked).
+    """
+    occ = ((state.tags >= 0) & valid_mask & ~state.pinned
+           & (state.tags != lock_a) & (state.tags != lock_b))
+    inf = jnp.int32(INT_MAX)
+    fifo_m = jnp.where(occ, state.ins_seq, inf)
+    lru_m = jnp.where(occ, state.last_use, inf)
+    # LFU-lite: frequency (capped) with insertion-order tiebreak in low bits.
+    lfu_metric = (jnp.minimum(state.freq, 511) * (2**21)
+                  + (state.ins_seq & (2**21 - 1)))
+    lfu_m = jnp.where(occ, lfu_metric, inf)
+    opt_m = jnp.where(occ, -state.next_use, inf)   # farthest next use first
+    metric = jnp.select(
+        [policy == FIFO, policy == LRU, policy == LFU, policy == OPT],
+        [fifo_m, lru_m, lfu_m, opt_m], fifo_m)
+    return jnp.argmin(metric)
+
+
+def on_access(state: CacheState, slot, *, now, next_use, is_write,
+              policy) -> CacheState:
+    """Metadata update for a hit at ``slot``.
+
+    FIFO deliberately does NOT update recency on hits (paper §3.2.2: the
+    circular-FIFO head is the longest-*resident* entry, not least-recent).
+    """
+    del policy  # all metadata maintained unconditionally; selection picks.
+    return dataclasses.replace(
+        state,
+        dirty=state.dirty.at[slot].set(state.dirty[slot] | is_write),
+        last_use=state.last_use.at[slot].set(now),
+        freq=state.freq.at[slot].add(1),
+        next_use=state.next_use.at[slot].set(next_use),
+    )
+
+
+def on_install(state: CacheState, slot, tag, *, now, seq, next_use,
+               is_write, pinned=False) -> CacheState:
+    """Install ``tag`` into ``slot`` (after any eviction)."""
+    return CacheState(
+        tags=state.tags.at[slot].set(tag),
+        dirty=state.dirty.at[slot].set(is_write),
+        ins_seq=state.ins_seq.at[slot].set(seq),
+        last_use=state.last_use.at[slot].set(now),
+        freq=state.freq.at[slot].set(1),
+        next_use=state.next_use.at[slot].set(next_use),
+        pinned=state.pinned.at[slot].set(pinned),
+    )
+
+
+def lookup(state: CacheState, tag, valid_mask):
+    """(hit, slot) for ``tag``; slot is the match or an arbitrary index."""
+    eq = (state.tags == tag) & valid_mask
+    return eq.any(), jnp.argmax(eq)
+
+
+def free_slot(state: CacheState, valid_mask):
+    """(has_free, slot) pointing at an unoccupied in-capacity slot."""
+    free = (state.tags < 0) & valid_mask
+    return free.any(), jnp.argmax(free)
+
+
+# ------------------------------------------------------------------ numpy --
+# Reference (oracle) implementations used by the numpy interpreter and by
+# hypothesis property tests.  Kept deliberately simple and independent of the
+# jax versions above.
+
+def np_select_victim(tags, ins_seq, last_use, freq, next_use, pinned,
+                     capacity, policy, locked=()) -> int:
+    best, best_m = -1, None
+    for i in range(capacity):
+        if tags[i] < 0 or pinned[i] or tags[i] in locked:
+            continue
+        m = {FIFO: ins_seq[i], LRU: last_use[i],
+             LFU: (freq[i], ins_seq[i]), OPT: -next_use[i]}[policy]
+        if best_m is None or m < best_m:
+            best, best_m = i, m
+    assert best >= 0, "no evictable slot"
+    return best

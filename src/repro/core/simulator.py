@@ -1,0 +1,305 @@
+"""Cycle-level cVRF / Register Dispersion simulator (JAX ``lax.scan``).
+
+Models the paper's microarchitecture (§3, Table 1):
+
+  * compact VRF of ``capacity`` physical 256-bit registers, fully associative,
+    tag array checked serially per operand, FIFO (or alternative) replacement;
+  * ``v0`` pinned outside the cVRF (its accesses never reach the tag array);
+  * every architectural register has a reserved memory address; spills/fills
+    are 32-byte transfers through the modelled L1D (16 KB, 2-way, 32 B lines,
+    1-cycle hit) backed by a 5-cycle main memory;
+  * vector loads/stores share the same L1 port (integrated VPU, Fig 1);
+  * a full-size VRF baseline (``capacity >= 32``) in which every operand
+    access hits and no fills ever occur (real hardware has no compulsory
+    misses — registers simply exist).
+
+The whole sweep of Fig 4 (capacities 3..16 x policies) is one ``vmap`` over
+the per-config axis of :func:`simulate_sweep`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev_mod
+from repro.core import isa, policies
+from repro.core.events import K_MEM, K_REG, EventStream
+from repro.core.trace import Program
+
+# ---------------------------------------------------------------------------
+# Static machine parameters (Table 1).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    l1_sets: int = 256            # 16 KB / 32 B lines / 2 ways
+    l1_ways: int = 2
+    l1_hit_cycles: int = 0        # data-path hits overlap the vector pipe
+    uop_hit_cycles: int = 1       # spill/fill micro-ops serialize in ID
+    mem_latency: int = 5          # main memory @200 MHz (Table 1: 1-5 cycles)
+
+    def tree_flatten(self):  # convenience for static hashing in jit
+        return dataclasses.astuple(self)
+
+
+DEFAULT_MACHINE = MachineParams()
+
+COUNTER_NAMES = (
+    "cycles", "stall_cycles", "vrf_hits", "vrf_misses", "spills", "fills",
+    "l1_hits", "l1_misses", "reg_reads", "reg_writes", "mem_reads",
+    "mem_writes",
+)
+
+
+@dataclasses.dataclass
+class SweepConfig:
+    """Per-configuration sweep axes (arrays of equal length C)."""
+
+    capacity: np.ndarray        # physical registers in the cVRF
+    policy: np.ndarray          # policies.FIFO / LRU / LFU / OPT
+    alloc_no_fetch: np.ndarray  # beyond-paper: skip fetch on full overwrite
+
+    @staticmethod
+    def make(capacities, policy=policies.FIFO, alloc_no_fetch=False):
+        caps = np.asarray(capacities, np.int32)
+        pol = np.broadcast_to(np.asarray(policy, np.int32), caps.shape).copy()
+        anf = np.broadcast_to(np.asarray(alloc_no_fetch, bool),
+                              caps.shape).copy()
+        return SweepConfig(caps, pol, anf)
+
+
+# ---------------------------------------------------------------------------
+# L1 data cache model.
+# ---------------------------------------------------------------------------
+
+
+class L1State(dict):
+    pass
+
+
+def _l1_init(p: MachineParams):
+    return dict(
+        tags=jnp.full((p.l1_sets, p.l1_ways), -1, jnp.int32),
+        age=jnp.zeros((p.l1_sets, p.l1_ways), jnp.int32),
+        dirty=jnp.zeros((p.l1_sets, p.l1_ways), bool),
+    )
+
+
+def _l1_access(l1, line, is_write, now, p: MachineParams,
+               hit_cost: int | None = None):
+    """Returns (l1', cycles, hit). One cacheline access, LRU within the set,
+    write-allocate + write-back.  ``hit_cost`` overrides the hit cycles
+    (0 for pipelined data accesses, 1 for dispersion spill/fill uops)."""
+    set_idx = (line % p.l1_sets).astype(jnp.int32)
+    row_tags = l1["tags"][set_idx]
+    row_age = l1["age"][set_idx]
+    row_dirty = l1["dirty"][set_idx]
+    eq = row_tags == line
+    hit = eq.any()
+    way = jnp.where(hit, jnp.argmax(eq), jnp.argmin(row_age))
+    writeback = ~hit & (row_tags[way] >= 0) & row_dirty[way]
+    hc = p.l1_hit_cycles if hit_cost is None else hit_cost
+    cycles = jnp.where(
+        hit, hc,
+        hc + p.mem_latency
+        + jnp.where(writeback, p.mem_latency, 0)).astype(jnp.int32)
+    new_dirty = jnp.where(hit, row_dirty[way] | is_write, is_write)
+    l1_new = dict(
+        tags=l1["tags"].at[set_idx, way].set(line),
+        age=l1["age"].at[set_idx, way].set(now),
+        dirty=l1["dirty"].at[set_idx, way].set(new_dirty),
+    )
+    return l1_new, cycles, hit
+
+
+def _where_tree(cond, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Scan body.
+# ---------------------------------------------------------------------------
+
+
+def _make_step(p: MachineParams, spill_line0: int, n_slots: int):
+    spill_line0 = jnp.int32(spill_line0)
+
+    def step(carry, ev):
+        cache, l1, seq, now, ctr, cfg = carry
+        capacity, policy, alloc_no_fetch = cfg
+        kind, reg, line, is_write, needs_read, no_fetch_ok, cost, nxt, lock_a, lock_b = ev
+        is_reg = kind == K_REG
+        is_mem = kind == K_MEM
+        full_vrf = capacity >= isa.NUM_ARCH_VREGS
+        valid_mask = jnp.arange(n_slots) < capacity
+
+        # ------------------------------------------------- cVRF tag check --
+        raw_hit, slot = policies.lookup(cache, reg, valid_mask)
+        hit = raw_hit | full_vrf
+        has_free, fslot = policies.free_slot(cache, valid_mask)
+        victim = policies.select_victim(cache, policy, valid_mask,
+                                lock_a, lock_b)
+        tslot = jnp.where(has_free, fslot, victim)
+
+        do_evict = is_reg & ~hit & ~has_free
+        do_spill = do_evict & cache.dirty[victim]
+        fetch = needs_read | ~(no_fetch_ok & alloc_no_fetch)
+        do_fill = is_reg & ~hit & fetch
+
+        # L1 traffic: spill (write evictee to its reserved address), then
+        # fill (read the missing register), then the instruction's own data
+        # access.  The three are chained select-updates on the same L1.
+        ln_spill = spill_line0 + jnp.maximum(cache.tags[victim], 0)
+        l1_a, c_a, h_a = _l1_access(l1, ln_spill, True, now, p,
+                                    hit_cost=p.uop_hit_cycles)
+        l1_1 = _where_tree(do_spill, l1_a, l1)
+        c_spill = jnp.where(do_spill, c_a, 0)
+
+        ln_fill = spill_line0 + jnp.maximum(reg, 0)
+        l1_b, c_b, h_b = _l1_access(l1_1, ln_fill, False, now, p,
+                                    hit_cost=p.uop_hit_cycles)
+        l1_2 = _where_tree(do_fill, l1_b, l1_1)
+        c_fill = jnp.where(do_fill, c_b, 0)
+
+        l1_c, c_c, h_c = _l1_access(l1_2, line, is_write, now, p)
+        l1_3 = _where_tree(is_mem, l1_c, l1_2)
+        c_mem = jnp.where(is_mem, c_c, 0)
+
+        # ------------------------------------------------ metadata update --
+        upd_hit = policies.on_access(cache, slot, now=now, next_use=nxt,
+                                     is_write=is_write, policy=policy)
+        upd_miss = policies.on_install(cache, tslot, reg, now=now, seq=seq,
+                                       next_use=nxt, is_write=is_write)
+        new_cache = _where_tree(is_reg & raw_hit & ~full_vrf, upd_hit, cache)
+        new_cache = _where_tree(is_reg & ~hit & ~full_vrf, upd_miss, new_cache)
+        seq = seq + (is_reg & ~hit).astype(jnp.int32)
+
+        # ------------------------------------------------------- counters --
+        stall = c_spill + c_fill
+        inc = dict(
+            cycles=cost.astype(jnp.int32) + stall + c_mem,
+            stall_cycles=stall,
+            vrf_hits=(is_reg & hit).astype(jnp.int32),
+            vrf_misses=(is_reg & ~hit).astype(jnp.int32),
+            spills=do_spill.astype(jnp.int32),
+            fills=do_fill.astype(jnp.int32),
+            l1_hits=(do_spill & h_a).astype(jnp.int32)
+            + (do_fill & h_b).astype(jnp.int32)
+            + (is_mem & h_c).astype(jnp.int32),
+            l1_misses=(do_spill & ~h_a).astype(jnp.int32)
+            + (do_fill & ~h_b).astype(jnp.int32)
+            + (is_mem & ~h_c).astype(jnp.int32),
+            reg_reads=(is_reg & needs_read).astype(jnp.int32),
+            reg_writes=(is_reg & is_write).astype(jnp.int32),
+            mem_reads=(is_mem & ~is_write).astype(jnp.int32),
+            mem_writes=(is_mem & is_write).astype(jnp.int32),
+        )
+        ctr = {k: ctr[k] + inc[k] for k in ctr}
+        return (new_cache, l1_3, seq, now + 1, ctr, cfg), None
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _run_one(ev_arrays, p: MachineParams, spill_line0: int, cfg):
+    n_slots = isa.NUM_ARCH_VREGS
+    cache = policies.CacheState.init(n_slots)
+    l1 = _l1_init(p)
+    ctr = {k: jnp.int32(0) for k in COUNTER_NAMES}
+    step = _make_step(p, spill_line0, n_slots)
+    carry = (cache, l1, jnp.int32(0), jnp.int32(0), ctr, cfg)
+    (cache, l1, _, _, ctr, _), _ = jax.lax.scan(step, carry, ev_arrays)
+    return ctr
+
+
+def _ev_arrays(ev: EventStream):
+    return (
+        jnp.asarray(ev.kind), jnp.asarray(ev.reg), jnp.asarray(ev.line.astype(np.int32)),
+        jnp.asarray(ev.is_write), jnp.asarray(ev.needs_read),
+        jnp.asarray(ev.no_fetch_ok), jnp.asarray(ev.cost),
+        jnp.asarray(ev.next_use), jnp.asarray(ev.lock_a),
+        jnp.asarray(ev.lock_b),
+    )
+
+
+def simulate_sweep(program_or_events, sweep: SweepConfig,
+                   machine: MachineParams = DEFAULT_MACHINE,
+                   max_events: int | None = None) -> dict[str, np.ndarray]:
+    """Simulate one trace under C configurations (vmapped). Returns dict of
+    (C,)-shaped counter arrays plus derived metrics."""
+    ev = (program_or_events if isinstance(program_or_events, EventStream)
+          else ev_mod.expand(program_or_events))
+    arrays = _ev_arrays(ev)
+    scale = 1.0
+    if max_events is not None and ev.num_events > max_events:
+        scale = ev.num_events / max_events
+        arrays = tuple(a[:max_events] for a in arrays)
+    cfg = (jnp.asarray(sweep.capacity), jnp.asarray(sweep.policy),
+           jnp.asarray(sweep.alloc_no_fetch))
+    fn = jax.vmap(lambda c: _run_one(arrays, machine, ev.spill_line0, c))
+    out = {k: np.asarray(v) for k, v in fn(cfg).items()}
+    out["event_scale"] = np.full(len(sweep.capacity), scale)
+    total = out["vrf_hits"] + out["vrf_misses"]
+    out["hit_rate"] = np.where(total > 0, out["vrf_hits"] / np.maximum(total, 1), 1.0)
+    return out
+
+
+def simulate_one(program, capacity, policy=policies.FIFO,
+                 alloc_no_fetch=False,
+                 machine: MachineParams = DEFAULT_MACHINE,
+                 max_events: int | None = None) -> dict[str, float]:
+    sweep = SweepConfig.make([capacity], policy, alloc_no_fetch)
+    out = simulate_sweep(program, sweep, machine, max_events)
+    return {k: v[0] for k, v in out.items()}
+
+
+def full_vrf_baseline(program, machine: MachineParams = DEFAULT_MACHINE,
+                      max_events: int | None = None) -> dict[str, float]:
+    return simulate_one(program, isa.NUM_ARCH_VREGS, machine=machine,
+                        max_events=max_events)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-core baseline (the paper's Table 3 comparison point).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScalarCost:
+    """Analytic cycle model of the -O2 scalar RISC-V version of a kernel.
+
+    On a 3-stage in-order embedded core (Table 1):
+      flop_ops:  FPU ops at ``flop_cycles`` each (low-cost FPUs are not
+                 fully pipelined; fmadd ~2 cycles effective)
+      int_ops:   1-cycle integer ALU ops (incl. branchy min/max selects)
+      loads:     ``load_cycles`` each (L1 hit + average load-use hazard)
+      stores:    1 cycle
+      unique_lines: distinct cachelines -> compulsory-miss stalls
+      loop_iters: per-iteration overhead (addr bump + cmp + taken branch;
+                 embedded -O2 without aggressive unrolling)
+    """
+
+    flop_ops: int = 0
+    int_ops: int = 0
+    loads: int = 0
+    stores: int = 0
+    unique_lines: int = 0
+    loop_iters: int = 0
+    flop_cycles: float = 2.0
+    load_cycles: float = 1.5
+    overhead_per_iter: int = 3
+
+    def cycles(self, machine: MachineParams = DEFAULT_MACHINE) -> int:
+        return int(
+            self.flop_ops * self.flop_cycles
+            + self.int_ops
+            + self.loads * self.load_cycles
+            + self.stores
+            + self.unique_lines * machine.mem_latency
+            + self.loop_iters * self.overhead_per_iter)

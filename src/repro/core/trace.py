@@ -1,0 +1,215 @@
+"""Trace eDSL: assemble RVV-lite vector programs as instruction traces.
+
+A kernel is written once against :class:`Assembler` and yields a
+:class:`Program` — dense numpy field arrays consumed by
+
+  * ``core.interpreter``  — functional execution (numeric oracle), and
+  * ``core.simulator``    — the cycle-level cVRF / Register Dispersion model.
+
+Hot loops are emitted with :meth:`Assembler.repeat`, which replicates an
+instruction block with per-instruction address strides in vectorised numpy
+(multi-million-instruction traces assemble in milliseconds, matching how a
+compiler emits a strip-mined RVV loop body that reuses the same register
+names every iteration).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import numpy as np
+
+from repro.core import isa
+
+_FIELDS = ("op", "vd", "vs1", "vs2", "addr", "imm", "cost_override",
+           "stride", "stride2")
+
+
+@dataclasses.dataclass
+class Program:
+    """A finalized RVV-lite trace plus its memory image."""
+
+    op: np.ndarray            # (T,) int32 opcode
+    vd: np.ndarray            # (T,) int32 destination vreg (-1 if none)
+    vs1: np.ndarray           # (T,) int32 source 1 (-1 if none)
+    vs2: np.ndarray           # (T,) int32 source 2 (-1 if none)
+    addr: np.ndarray          # (T,) int64 byte address for memory ops (-1 else)
+    imm: np.ndarray           # (T,) float32 scalar immediate
+    cost_override: np.ndarray  # (T,) int32, -1 => use the ISA table cost
+    memory: np.ndarray        # (M,) float32 initial memory image
+    buffers: dict[str, tuple[int, int]]  # name -> (base byte addr, n_f32)
+    name: str = "program"
+
+    @property
+    def num_instructions(self) -> int:
+        return int(self.op.shape[0])
+
+    def active_vregs(self) -> np.ndarray:
+        """Distinct architectural vector registers referenced by the trace."""
+        regs = np.concatenate([self.vd, self.vs1, self.vs2])
+        tbl = isa.op_table()
+        used = np.concatenate([
+            self.vd[tbl["writes_vd"][self.op] | tbl["reads_vd"][self.op]],
+            self.vs1[tbl["reads_vs1"][self.op]],
+            self.vs2[tbl["reads_vs2"][self.op]],
+        ])
+        used = used[used >= 0]
+        mask_writers = tbl["writes_mask"][self.op]
+        out = np.unique(used)
+        if mask_writers.any() or np.isin(self.op, list(isa.MASK_READERS)).any():
+            out = np.unique(np.concatenate([out, [isa.MASK_REG]]))
+        del regs
+        return out
+
+    def vrf_utilization(self) -> float:
+        return float(len(self.active_vregs())) / isa.NUM_ARCH_VREGS
+
+    def buffer_view(self, memory: np.ndarray, name: str) -> np.ndarray:
+        base, n = self.buffers[name]
+        assert base % 4 == 0
+        return memory[base // 4: base // 4 + n]
+
+
+class MemoryMap:
+    """32-byte-aligned named buffer allocator building the initial memory."""
+
+    def __init__(self):
+        self._cursor = 0
+        self._chunks: list[tuple[int, np.ndarray]] = []
+        self.buffers: dict[str, tuple[int, int]] = {}
+
+    @staticmethod
+    def _align(x: int, a: int = isa.VLEN_BYTES) -> int:
+        return (x + a - 1) // a * a
+
+    def alloc(self, name: str, data_or_size) -> int:
+        """Allocate a named f32 buffer; returns its base *byte* address."""
+        if isinstance(data_or_size, (int, np.integer)):
+            data = np.zeros(int(data_or_size), np.float32)
+        else:
+            data = np.asarray(data_or_size, np.float32).reshape(-1)
+        base = self._align(self._cursor)
+        self._cursor = base + data.size * 4
+        self._chunks.append((base, data))
+        self.buffers[name] = (base, data.size)
+        return base
+
+    def build(self, extra_bytes: int = 0) -> np.ndarray:
+        size = self._align(self._cursor + extra_bytes) // 4
+        mem = np.zeros(size, np.float32)
+        for base, data in self._chunks:
+            mem[base // 4: base // 4 + data.size] = data
+        return mem
+
+
+class Assembler:
+    """Builds instruction traces. Registers are plain ints in [0, 32)."""
+
+    def __init__(self, name: str = "program"):
+        self.name = name
+        self._cols = {f: [] for f in _FIELDS}
+
+    # ---------------------------------------------------------------- emit --
+    def _emit(self, op, vd=-1, vs1=-1, vs2=-1, addr=-1, imm=0.0,
+              cost=-1, stride=0, stride2=0):
+        for r in (vd, vs1, vs2):
+            if r != -1 and not (0 <= r < isa.NUM_ARCH_VREGS):
+                raise ValueError(f"bad vreg {r}")
+        c = self._cols
+        c["op"].append(op); c["vd"].append(vd); c["vs1"].append(vs1)
+        c["vs2"].append(vs2); c["addr"].append(addr); c["imm"].append(imm)
+        c["cost_override"].append(cost); c["stride"].append(stride)
+        c["stride2"].append(stride2)
+
+    # Memory ops. ``stride`` advances ``addr`` per iteration of an enclosing
+    # ``repeat`` block.
+    def vle(self, vd, addr, stride=0, stride2=0):
+        self._emit(isa.VLE, vd=vd, addr=addr, stride=stride, stride2=stride2)
+
+    def vse(self, vs, addr, stride=0, stride2=0):
+        self._emit(isa.VSE, vs1=vs, addr=addr, stride=stride, stride2=stride2)
+
+    def vbcast(self, vd, addr, stride=0, stride2=0):
+        self._emit(isa.VBCAST, vd=vd, addr=addr, stride=stride,
+                   stride2=stride2)
+
+    def vses(self, vs, addr, stride=0, stride2=0):
+        """Store element 0 of vs as a 4-byte scalar (vfmv.f.s + fsw)."""
+        self._emit(isa.VSES, vs1=vs, addr=addr, stride=stride,
+                   stride2=stride2)
+
+    # Arithmetic.
+    def vadd(self, vd, vs1, vs2): self._emit(isa.VADD, vd, vs1, vs2)
+    def vsub(self, vd, vs1, vs2): self._emit(isa.VSUB, vd, vs1, vs2)
+    def vmul(self, vd, vs1, vs2): self._emit(isa.VMUL, vd, vs1, vs2)
+    def vdiv(self, vd, vs1, vs2): self._emit(isa.VDIV, vd, vs1, vs2)
+    def vsqrt(self, vd, vs1): self._emit(isa.VSQRT, vd, vs1)
+    def vmacc(self, vd, vs1, vs2): self._emit(isa.VFMA, vd, vs1, vs2)
+    def vmax(self, vd, vs1, vs2): self._emit(isa.VMAX, vd, vs1, vs2)
+    def vmin(self, vd, vs1, vs2): self._emit(isa.VMIN, vd, vs1, vs2)
+    def vxor(self, vd, vs1, vs2): self._emit(isa.VXOR, vd, vs1, vs2)
+    def vredsum(self, vd, seed, vs2): self._emit(isa.VREDSUM, vd, seed, vs2)
+    def vredmax(self, vd, seed, vs2): self._emit(isa.VREDMAX, vd, seed, vs2)
+    def vmv(self, vd, vs1): self._emit(isa.VMVV, vd, vs1)
+    def vmslt(self, vs1, vs2): self._emit(isa.VCMPLT, -1, vs1, vs2)
+    def vmerge(self, vd, vs1, vs2): self._emit(isa.VMERGE, vd, vs1, vs2)
+    def vslide1dn(self, vd, vs1, x=0.0):
+        self._emit(isa.VSLIDE1DN, vd, vs1, imm=x)
+    def vslide1up(self, vd, vs1, x=0.0):
+        self._emit(isa.VSLIDE1UP, vd, vs1, imm=x)
+    def vmul_sc(self, vd, vs1, x): self._emit(isa.VMULSC, vd, vs1, imm=x)
+    def vadd_sc(self, vd, vs1, x): self._emit(isa.VADDSC, vd, vs1, imm=x)
+
+    def scalar(self, n=1):
+        """n cycles of scalar bookkeeping (pointer bumps, vsetvli, branch)."""
+        self._emit(isa.SCALAR, cost=int(n))
+
+    # -------------------------------------------------------------- repeat --
+    @contextlib.contextmanager
+    def repeat(self, n: int):
+        """Replicate the enclosed block n times, advancing each memory-op
+        address by its ``stride`` per iteration (vectorised expansion).
+
+        Repeats nest one level: after expansion, each instruction's
+        ``stride2`` becomes its ``stride``, so an *enclosing* repeat applies
+        the outer-loop stride (e.g. inner loop over K with stride 4, outer
+        loop over column chunks with stride2 32)."""
+        if n < 1:
+            raise ValueError("repeat count must be >= 1")
+        start = len(self._cols["op"])
+        yield
+        k = len(self._cols["op"]) - start
+        if k == 0:
+            return
+        block = {f: np.asarray(self._cols[f][start:], dtype=np.float64
+                               if f == "imm" else np.int64)
+                 for f in _FIELDS}
+        reps = np.arange(n, dtype=np.int64)
+        tiled = {f: np.tile(block[f], n) for f in _FIELDS}
+        stride = np.tile(block["stride"], n)
+        addr = tiled["addr"].copy()
+        mem = addr >= 0
+        addr[mem] = addr[mem] + np.repeat(reps, k)[mem] * stride[mem]
+        tiled["addr"] = addr
+        tiled["stride"] = tiled["stride2"].copy()
+        tiled["stride2"] = np.zeros_like(tiled["stride2"])
+        for f in _FIELDS:
+            del self._cols[f][start:]
+            self._cols[f].extend(tiled[f].tolist())
+
+    # ------------------------------------------------------------ finalize --
+    def finalize(self, mm: MemoryMap, extra_bytes: int = 0) -> Program:
+        c = self._cols
+        return Program(
+            op=np.asarray(c["op"], np.int32),
+            vd=np.asarray(c["vd"], np.int32),
+            vs1=np.asarray(c["vs1"], np.int32),
+            vs2=np.asarray(c["vs2"], np.int32),
+            addr=np.asarray(c["addr"], np.int64),
+            imm=np.asarray(c["imm"], np.float32),
+            cost_override=np.asarray(c["cost_override"], np.int32),
+            memory=mm.build(extra_bytes),
+            buffers=dict(mm.buffers),
+            name=self.name,
+        )

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+__all__ = ["DataConfig", "SyntheticCorpus"]

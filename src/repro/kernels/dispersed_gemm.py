@@ -1,0 +1,152 @@
+"""Dispersed-accumulator GEMM: the cVRF trade-off at VMEM granularity.
+
+TPU adaptation of Register Dispersion (DESIGN.md §2.B).  Output tiles of
+C = A @ B play the role of *architectural vector registers*; the VMEM
+accumulator scratch plays the role of the *compact physical register file*.
+
+Two schedules expose the paper's trade-off:
+
+  * ``matmul_grouped(working_set=W)`` — a compact set of W row-tile
+    accumulators is VMEM-resident while the full K reduction completes for
+    the group ("registers cached in the cVRF"): grid (groups, k, W).  The B
+    panel is fetched once per (group, k) and reused W times, so B HBM
+    traffic scales as 1/W — more physical registers => less memory traffic,
+    exactly the paper's Fig 4 economics at a different level of the
+    hierarchy.  VMEM cost grows linearly in W (the cVRF area analogue).
+
+  * ``matmul_dispersed()`` — the W=0 extreme: every accumulator access
+    round-trips through HBM (grid (k, m) with the output block revisited
+    per k step), i.e. every "register access" is a spill+fill.
+
+``hbm_traffic_model`` gives the closed-form bytes for the roofline tables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _grouped_kernel(a_ref, b_ref, o_ref, acc_scr, *, nk: int):
+    ik = pl.program_id(1)
+    iw = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[iw] = jnp.zeros_like(acc_scr[iw])
+
+    acc_scr[iw] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _writeback():                      # "eviction" at end of reduction
+        o_ref[...] = acc_scr[iw].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_k", "working_set", "interpret"))
+def matmul_grouped(a, b, *, block_m: int = 128, block_k: int = 512,
+                   working_set: int = 4, interpret: bool = False):
+    """C = A @ B with a compact, VMEM-resident accumulator working set.
+
+    Grid (groups, k, w), k middle: for each group of ``working_set`` M-tiles
+    the full K reduction runs before moving on; the B panel block index
+    depends only on k, so Pallas fetches it once per (group, k) and the
+    pipeline reuses it across the W inner steps.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    block_m = min(block_m, m)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and k % block_k == 0
+    nm, nk = m // block_m, k // block_k
+    w = min(working_set, nm)
+    assert nm % w == 0
+    groups = nm // w
+
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, nk=nk),
+        grid=(groups, nk, w),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda g, ik, iw, w=w: (g * w + iw, ik)),
+            pl.BlockSpec((block_k, n), lambda g, ik, iw: (ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n),
+                               lambda g, ik, iw, w=w: (g * w + iw, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((w, block_m, n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out
+
+
+def _dispersed_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    ik = pl.program_id(0)
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The output tile was just refetched from HBM (a "fill"); accumulate and
+    # let the pipeline spill it back when the grid moves on.
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(o_ref.dtype), b_ref[...].astype(o_ref.dtype),
+        (((1,), (0,)), ((), ())), preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_k", "interpret"))
+def matmul_dispersed(a, b, *, block_m: int = 128, block_k: int = 512,
+                     interpret: bool = False):
+    """The no-cache extreme: every accumulator revisit spills/fills HBM.
+
+    Grid (k, m) with k outermost: each output tile is written back and
+    refetched on every k step (2*M*N*nk bytes of accumulator traffic).
+    Accumulation is carried in f32 output storage.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    block_m = min(block_m, m)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and k % block_k == 0
+    nm, nk = m // block_m, k // block_k
+
+    out = pl.pallas_call(
+        functools.partial(_dispersed_kernel, nk=nk),
+        grid=(nk, nm),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda ik, im: (im, ik)),
+            pl.BlockSpec((block_k, n), lambda ik, im: (ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda ik, im: (im, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out.astype(a.dtype)
+
+
+def hbm_traffic_model(m: int, n: int, k: int, *, block_m: int, block_k: int,
+                      working_set: int, bytes_per_el: int = 2) -> dict:
+    """Closed-form HBM bytes for the two schedules (roofline input).
+
+    grouped: A once, B once per group (=nm/W), C once.
+    dispersed: A once, B once per k-step... (B reused across m at fixed k),
+               C spilled+filled per k step.
+    """
+    nm = m // block_m
+    nk = k // block_k
+    w = min(working_set, nm)
+    groups = max(nm // w, 1)
+    grouped = (m * k + groups * k * n + m * n) * bytes_per_el
+    dispersed = (m * k + nk * k * n // nk + 2 * m * n * nk) * bytes_per_el
+    ideal = (m * k + k * n + m * n) * bytes_per_el
+    return dict(grouped=grouped, dispersed=dispersed, ideal=ideal,
+                vmem_acc_bytes=w * block_m * n * 4)

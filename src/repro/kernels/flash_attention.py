@@ -1,0 +1,128 @@
+"""FlashAttention-2 Pallas TPU kernel with an O(1) VMEM working set.
+
+TPU adaptation of the paper's insight (DESIGN.md §2.B): the running-max /
+normaliser / output-accumulator tiles form a *compact physical working set*
+in VMEM (the cVRF analogue), while the S x S score matrix — the
+"architectural state" — is never materialised; K/V stream through VMEM
+blocks.  Grid = (batch*heads, q blocks, kv blocks) with the kv dimension
+innermost so the accumulator scratch persists across kv steps.
+
+BlockSpec tiling (all MXU-aligned, multiples of (8,128) for f32 /
+(16,128) for bf16):
+  q:   (1, block_q, d)     indexed by (bh, iq)
+  k/v: (1, block_k, d)     indexed by (bh, ik)
+  out: (1, block_q, d)     written on the last kv step
+VMEM scratch: acc (block_q, d) f32, m/l (block_q, MIN_LANE) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, scale: float, block_q: int, block_k: int,
+                  num_kv_blocks: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    run = True
+    if causal:
+        # Skip fully-masked blocks (query strictly above the diagonal).
+        run = k_start < q_start + block_q
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bq, bk)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)           # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        p = jnp.exp(s - m_new)                              # (bq, bk)
+        l_new = l_scr[:, :1] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                     # fully-masked rows
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = False,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q,k,v: (B, H, S, D) with equal H (caller expands GQA). Returns same
+    shape as q.  Set ``interpret=True`` to run on CPU (tests/oracle sweeps).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    if scale is None:
+        scale = float(d) ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    bh = b * h
+    qr = q.reshape(bh, sq, d)
+    kr = k.reshape(bh, sk, d)
+    vr = v.reshape(bh, sk, d)
+    nq = sq // block_q
+    nk = sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, num_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh_, iq, ik: (bh_, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh_, iq, ik: (bh_, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh_, iq, ik: (bh_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh_, iq, ik: (bh_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),      # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),      # normaliser
+            pltpu.VMEM((block_q, d), jnp.float32),          # output acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: True when no TPU is present (this container
+is CPU-only; interpret mode executes the kernel body with jnp semantics),
+False on real TPU hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispersed_gemm as _dg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as ref
+
+
+def _auto_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = False,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """FlashAttention-2 with GQA support: k/v may have fewer heads than q
+    (q heads must be a multiple); they are expanded before the kernel."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    hq, hkv = q.shape[1], k.shape[1]
+    if hkv != hq:
+        assert hq % hkv == 0
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def matmul(a, b, *, working_set: int = 4, block_m: int = 128,
+           block_k: int = 512, interpret: bool | None = None):
+    """Grouped (compact-working-set) GEMM — the recommended schedule."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _dg.matmul_grouped(a, b, block_m=block_m, block_k=block_k,
+                              working_set=working_set, interpret=interpret)
+
+
+def matmul_dispersed(a, b, *, block_m: int = 128, block_k: int = 512,
+                     interpret: bool | None = None):
+    """Fully-dispersed (HBM round-trip accumulators) GEMM — the W=0 extreme."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _dg.matmul_dispersed(a, b, block_m=block_m, block_k=block_k,
+                                interpret=interpret)
+
+
+hbm_traffic_model = _dg.hbm_traffic_model

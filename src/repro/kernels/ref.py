@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` layer)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = False,
+                  scale: float | None = None) -> jnp.ndarray:
+    """Reference attention. q,k,v: (B, H, S, D) with equal head counts."""
+    *_, sq, d = q.shape
+    sk = k.shape[-2]
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def matmul_ref(a, b) -> jnp.ndarray:
+    """C = A @ B in f32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)
+                      ).astype(a.dtype)

@@ -1,0 +1,1 @@
+"""Launch layer: mesh, sharding rules, input specs, dry-run, train/serve."""

@@ -1,0 +1,119 @@
+"""Parameter / optimizer / batch / cache sharding rules.
+
+2-D sharding ("tensor parallel" on the model axis + FSDP on the data axis):
+for every parameter we pick the model-parallel dimension by name-aware rules
+with divisibility-aware degradation (models.common), and FSDP-shard a second
+dimension.  Optimizer moments/master mirror the parameter specs, so the full
+AdamW state for command-r-plus-104b (~1.3 TB in f32) spreads over all 256
+chips (~5 GB each) — the ZeRO-3 requirement for v5e (16 GB HBM).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import common
+
+# Leaf-name -> (dim roles) AFTER stripping a leading stacked-layer dim.
+# Roles: "m" = model axis, "f" = fsdp(data) axis, "-" = replicated.
+_RULES_2D = {
+    "wq": "fm", "wk": "fm", "wv": "fm", "wo": "mf",
+    "wi": "fm", "wg": "fm",
+    "in_proj": "fm", "in_x": "fm", "in_z": "fm",
+    "out_proj": "mf", "x_proj": "m-", "dt_proj": "-m",
+    "wa": "mf", "wx": "mf",
+    "wdkv": "f-", "wkr": "f-", "wuk": "-m", "wuv": "-m",
+    "router": "--",
+    "embed": "mf", "lm_head": "fm",
+    "conv_w": "-m", "a_log": "m-",
+}
+_RULES_3D = {          # MoE expert-stacked weights (E, d, f) / (E, f, d)
+    "wi": "mf-", "wg": "mf-", "wo": "m-f",
+}
+_ROLE_AXIS = {"m": common.MODEL, "f": common.FSDP, "-": None}
+
+
+def _leaf_spec(path, leaf, mesh) -> NamedSharding:
+    names = [str(getattr(p, "key", "")) for p in path]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    stacked = any(n in ("blocks", "dense_blocks", "encoder", "decoder")
+                  for n in names)
+    core = shape[1:] if stacked and len(shape) > 1 else shape
+    prefix = [None] * (len(shape) - len(core))
+
+    roles = None
+    if len(core) == 3 and name in _RULES_3D:
+        roles = _RULES_3D[name]
+    elif len(core) == len(_RULES_2D.get(name, "")) and name in _RULES_2D:
+        roles = _RULES_2D[name]
+
+    if roles is not None:
+        dims = prefix + [_ROLE_AXIS[r] for r in roles]
+    elif len(core) == 1 and core[0] >= 2048:
+        dims = prefix + [common.MODEL]          # large vectors (d_skip, ...)
+    elif len(core) >= 2:
+        # Fallback heuristic: model on the last dim, fsdp on the first.
+        dims = prefix + [common.FSDP] + [None] * (len(core) - 2) \
+            + [common.MODEL]
+    else:
+        dims = prefix + [None] * len(core)
+    return common.named_sharding(mesh, shape, *dims)
+
+
+def params_shardings(params_shape, mesh):
+    """Pytree of NamedShardings matching a params (or eval_shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = [_leaf_spec(path, leaf, mesh) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(opt_shape, params_sh, mesh):
+    """Optimizer state mirrors parameter shardings (step replicated)."""
+    return {
+        "step": NamedSharding(mesh, P()),
+        "m": params_sh, "v": params_sh, "master": params_sh,
+    }
+
+
+def batch_shardings(batch_shape, mesh, kind: str = "train"):
+    if kind == "decode":
+        # serving layout: single-token batch replicated (see
+        # models.common.set_decode_layout)
+        return {k: NamedSharding(mesh, P()) for k in batch_shape}
+    out = {}
+    for k, v in batch_shape.items():
+        if k == "positions3":
+            out[k] = common.named_sharding(mesh, v.shape, None, common.BATCH,
+                                           None)
+        elif k in ("vision_embeds", "audio_embeds"):
+            out[k] = common.named_sharding(mesh, v.shape, common.BATCH, None,
+                                           None)
+        else:
+            out[k] = common.named_sharding(
+                mesh, v.shape, *([common.BATCH] + [None] * (v.ndim - 1)))
+    return out
+
+
+def cache_shardings(cache_shape, mesh):
+    """Serving cache: batch->data; long axes (seq / d_inner) -> model."""
+    rules = {
+        "k": (None, common.BATCH, common.MODEL, None, None),
+        "v": (None, common.BATCH, common.MODEL, None, None),
+        "ek": (None, common.BATCH, None, common.MODEL, None),
+        "ev": (None, common.BATCH, None, common.MODEL, None),
+        "c": (None, common.BATCH, common.MODEL, None),
+        "kr": (None, common.BATCH, common.MODEL, None),
+        "conv": (None, common.BATCH, None, common.MODEL),
+        "h": None,  # rank differs: ssm (L,B,din,n) vs hybrid (L,B,w)
+    }
+    out = {}
+    for k, v in cache_shape.items():
+        if k == "h":
+            dims = ((None, common.BATCH, common.MODEL, None) if v.ndim == 4
+                    else (None, common.BATCH, common.MODEL))
+        else:
+            dims = rules[k]
+        out[k] = common.named_sharding(mesh, v.shape, *dims)
+    return out

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Follows the assignment contract: specs are weak-type-correct, shardable
+stand-ins — no device allocation.  Modality frontends are stubs: the specs
+*are* the precomputed frame/patch embeddings the stub would produce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get
+from repro.models import get_model
+from repro.optim import adamw
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(arch_name: str, shape: ShapeConfig) -> dict:
+    cfg = get(arch_name)
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    out = {"tokens": S((b, s), I32), "positions": S((b, s), I32)}
+    if shape.kind == "train":
+        out["targets"] = S((b, s), I32)
+    if cfg.positional == "mrope":
+        out["positions3"] = S((3, b, s), I32)
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        out["vision_embeds"] = S((b, s, cfg.d_model), BF16)
+        out["vision_mask"] = S((b, s), jnp.bool_)
+    if cfg.encoder_decoder and shape.kind != "decode":
+        out["audio_embeds"] = S((b, cfg.encoder_seq, cfg.d_model), BF16)
+    return out
+
+
+def state_specs(arch_name: str):
+    """(params, opt, err) ShapeDtypeStruct pytrees via eval_shape."""
+    cfg = get(arch_name)
+    model = get_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(adamw.init_state, params)
+    return params, opt
+
+
+def cache_specs(arch_name: str, shape: ShapeConfig):
+    cfg = get(arch_name)
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def input_specs(arch_name: str, shape_name_or_cfg) -> dict:
+    """All specs for one cell: train -> params/opt/batch; decode ->
+    params/cache/batch."""
+    from repro.configs import SHAPES
+    shape = (SHAPES[shape_name_or_cfg]
+             if isinstance(shape_name_or_cfg, str) else shape_name_or_cfg)
+    params, opt = state_specs(arch_name)
+    out = {"batch": batch_specs(arch_name, shape), "params": params}
+    if shape.kind == "train":
+        out["opt"] = opt
+    if shape.kind == "decode":
+        out["cache"] = cache_specs(arch_name, shape)
+    return out

@@ -1,0 +1,7 @@
+"""Model zoo: layers + unified assembly for the assigned architectures."""
+
+from repro.models import attention, common, mlp, model, rglru, ssm
+from repro.models.model import Model, get_model
+
+__all__ = ["attention", "common", "mlp", "model", "rglru", "ssm",
+           "Model", "get_model"]

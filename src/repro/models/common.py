@@ -1,0 +1,244 @@
+"""Shared model components: norms, embeddings, RoPE/M-RoPE, sharding helper.
+
+All layers are functional: ``init_*`` returns a params pytree, ``apply``
+functions are pure.  Sharding is expressed through :func:`shard`, which
+applies ``with_sharding_constraint`` against the ambient mesh set by the
+launcher (:func:`set_mesh`); without a mesh it is a no-op so smoke tests and
+single-device runs need no mesh plumbing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+# Canonical logical axes:
+#   batch  -> ("pod", "data")     sequence -> None (or "model" for long KV)
+#   model-parallel (heads / ffn / vocab / experts) -> "model"
+#   fsdp (param second axis) -> "data"
+BATCH = ("pod", "data")
+MODEL = "model"
+FSDP = "data"
+
+
+def set_mesh(mesh) -> None:
+    _TLS.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_TLS, "mesh", None)
+
+
+def set_decode_layout(flag: bool) -> None:
+    """Serving layout (EXPERIMENTS.md §Perf H2'): single-token activations
+    are tiny (B,1,d); replicating them over the data axis lets every matmul
+    against 2D-sharded weights run as a local partial contraction + a ~3 MB
+    all-reduce, instead of re-gathering ~200 MB of weight shards per layer
+    per token (the behaviour the partitioner picks when the batch axis is
+    data-sharded).  Cache tensors keep their own explicit shardings."""
+    _TLS.decode = flag
+
+
+def in_decode_layout() -> bool:
+    return getattr(_TLS, "decode", False)
+
+
+@contextlib.contextmanager
+def decode_layout():
+    old = in_decode_layout()
+    set_decode_layout(True)
+    try:
+        yield
+    finally:
+        set_decode_layout(old)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    old = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(old)
+
+
+def _axis_size(mesh, a) -> int:
+    return mesh.shape[a]
+
+
+def _filter_axes(mesh, axes, dim_size=None):
+    """Drop axes not in the mesh; if ``dim_size`` is given, greedily drop
+    trailing axes until the dimension divides evenly (auto-degradation keeps
+    every (arch x shape) cell shardable: batch=1 long-context, odd vocabs
+    like whisper's 51866, etc.)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    present = [a for a in axes if a in mesh.axis_names]
+    if dim_size is not None:
+        while present:
+            prod = 1
+            for a in present:
+                prod *= _axis_size(mesh, a)
+            if dim_size % prod == 0:
+                break
+            present.pop()
+    if not present:
+        return None
+    return tuple(present) if len(present) > 1 else present[0]
+
+
+def spec(mesh, *dims, shape=None) -> P:
+    if shape is None:
+        return P(*[_filter_axes(mesh, d) for d in dims])
+    return P(*[_filter_axes(mesh, d, s) for d, s in zip(dims, shape)])
+
+
+def shard(x, *dims):
+    """Constrain ``x``'s sharding; dims are per-dimension axis (tuples) or
+    None.  Axes absent from the ambient mesh are dropped and axes that do
+    not divide the dimension are degraded; no mesh => no-op."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    if len(dims) != x.ndim:
+        raise ValueError(f"shard: {len(dims)} specs for rank-{x.ndim}")
+    if (in_decode_layout() and x.ndim == 3 and x.shape[1] == 1
+            and dims[0] == BATCH):
+        # (B,1,d) activations: batch replicated; residual-stream d sharded
+        # over the fsdp axis so matmuls against (d->data, f->model) weights
+        # contract locally and emit small partial-sum all-reduces instead of
+        # per-layer weight all-gathers.
+        last = FSDP if dims[-1] is None else dims[-1]
+        dims = (None,) + tuple(dims[1:-1]) + (last,)
+    ns = NamedSharding(mesh, spec(mesh, *dims, shape=x.shape))
+
+    # Bidirectional constraint (EXPERIMENTS.md §Perf H4): inside scanned +
+    # rematerialised layers the backward cotangents have no sharding anchors
+    # and the partitioner falls back to activation-sized all-gathers
+    # (~230 GB/step measured on qwen3 train_4k).  Constraining each
+    # activation's cotangent to the primal's sharding pins the whole
+    # backward graph.
+    @jax.custom_vjp
+    def _pin(y):
+        return jax.lax.with_sharding_constraint(y, ns)
+
+    def _pin_fwd(y):
+        return jax.lax.with_sharding_constraint(y, ns), None
+
+    def _pin_bwd(_, g):
+        return (jax.lax.with_sharding_constraint(g, ns),)
+
+    _pin.defvjp(_pin_fwd, _pin_bwd)
+    return _pin(x)
+
+
+def named_sharding(mesh, shape, *dims) -> NamedSharding:
+    """NamedSharding with the same divisibility-aware degradation."""
+    return NamedSharding(mesh, spec(mesh, *dims, shape=shape))
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers.
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ Qwen2-VL M-RoPE).
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+MROPE_FRACS = (0.25, 0.375, 0.375)        # temporal / height / width sections
+
+
+def apply_mrope(x, positions3, theta: float = 1e4):
+    """Qwen2-VL multimodal RoPE. x: (B,S,H,D); positions3: (3,B,S)."""
+    d = x.shape[-1]
+    half = d // 2
+    sec = [int(half * f) for f in MROPE_FRACS]
+    sec[-1] = half - sec[0] - sec[1]
+    freqs = rope_freqs(d, theta)                       # (half,)
+    parts = []
+    start = 0
+    for i, n in enumerate(sec):
+        ang = (positions3[i][..., None].astype(jnp.float32)
+               * freqs[start:start + n])               # (B,S,n)
+        parts.append(ang)
+        start += n
+    ang = jnp.concatenate(parts, -1)[:, :, None, :]    # (B,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], -1)
+    return jnp.asarray(out, jnp.float32)

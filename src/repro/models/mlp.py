@@ -1,0 +1,130 @@
+"""MLP blocks: SwiGLU / GELU and capacity-based Mixture-of-Experts.
+
+MoE uses group-wise GShard-style routing with a fixed per-group capacity:
+tokens are scatter-dispatched to (E, C) expert buffers via a sort-free rank
+computation, expert FFNs run as batched einsums (experts sharded over the
+``model`` mesh axis = expert parallelism), and results are combine-scattered
+back with router weights.  Dropped tokens (over capacity) fall back to the
+shared/residual path, as in GShard/Switch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import shard
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, kind: str = "swiglu") -> dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi": common.dense_init(ks[0], (d, d_ff), dtype),
+            "wg": common.dense_init(ks[1], (d, d_ff), dtype),
+            "wo": common.dense_init(ks[2], (d_ff, d), dtype, fan_in=d_ff),
+        }
+    return {
+        "wi": common.dense_init(ks[0], (d, d_ff), dtype),
+        "wo": common.dense_init(ks[2], (d_ff, d), dtype, fan_in=d_ff),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["wi"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"])
+    h = shard(h, common.BATCH, None, common.MODEL)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    if kind != "swiglu":
+        out = out + p["bo"]
+    return shard(out, common.BATCH, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts.
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, e), jnp.float32),
+        "wi": common.dense_init(ks[1], (e, d, ff), dtype),
+        "wg": common.dense_init(ks[2], (e, d, ff), dtype),
+        "wo": common.dense_init(ks[3], (e, ff, d), dtype, fan_in=ff),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d,
+                               cfg.moe_d_ff * cfg.num_shared_experts,
+                               dtype, "swiglu")
+    return p
+
+
+def _dispatch_ranks(expert_ids, num_experts):
+    """Per-(token,slot) rank within its expert, computed sort-free.
+
+    expert_ids: (T, k) int32.  rank[t,j] = #assignments to the same expert
+    strictly before flattened position t*k+j.  O(T*k*E) bool work.
+    """
+    t, k = expert_ids.shape
+    flat = expert_ids.reshape(-1)                        # (T*k,)
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot          # exclusive
+    rank = jnp.take_along_axis(ranks, flat[:, None], 1)[:, 0]
+    return rank.reshape(t, k)
+
+
+def moe(p, cfg, x, capacity_factor: float = 1.25):
+    """x: (B, S, d). Routing groups = batch rows (sharded over data)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    cap = max(int(capacity_factor * s * k / e), 1)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gate, ids = jax.lax.top_k(probs, k)                   # (B,S,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    def route_group(xg, idg, gateg):
+        rank = _dispatch_ranks(idg, e)                    # (S,k)
+        keep = rank < cap
+        # Scatter tokens into (E, C, d) buffers.
+        buf = jnp.zeros((e, cap, d), xg.dtype)
+        tok = jnp.repeat(jnp.arange(s), k)
+        buf = buf.at[idg.reshape(-1), jnp.where(
+            keep.reshape(-1), rank.reshape(-1), cap - 1)].add(
+            jnp.where(keep.reshape(-1)[:, None], xg[tok], 0))
+        return buf, rank, keep
+
+    buf, rank, keep = jax.vmap(route_group)(x, ids, gate)  # (B,E,C,d)
+    buf = shard(buf, common.BATCH, common.MODEL, None, None)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["wi"])
+    h = shard(h, common.BATCH, common.MODEL, None, None)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out_buf = shard(out_buf, common.BATCH, common.MODEL, None, None)
+
+    def combine_group(ob, idg, gateg, rankg, keepg):
+        w = jnp.where(keepg, gateg, 0.0)                  # (S,k)
+        gathered = ob[idg.reshape(-1),
+                      jnp.minimum(rankg.reshape(-1), cap - 1)]
+        gathered = gathered.reshape(s, k, d)
+        return (w[..., None] * gathered.astype(jnp.float32)).sum(1)
+
+    out = jax.vmap(combine_group)(out_buf, ids, gate, rank, keep)
+    out = out.astype(x.dtype)
+    if cfg.num_shared_experts:
+        out = out + mlp(p["shared"], x, "swiglu")
+    # Load-balancing auxiliary loss (Switch-style), returned for the trainer.
+    density = jax.nn.one_hot(ids, e).mean((0, 1, 2))
+    router_prob = probs.mean((0, 1))
+    aux = e * jnp.sum(density * router_prob)
+    return shard(out, common.BATCH, None, None), aux

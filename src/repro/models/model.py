@@ -1,0 +1,490 @@
+"""Unified model assembly for the ten assigned architectures.
+
+One :class:`Model` per :class:`ArchConfig`; families share layer code:
+
+  dense / vlm          : scan over [norm->GQA->norm->MLP] blocks
+  moe                  : scan over [norm->GQA/MLA->norm->MoE] blocks
+                         (+ leading dense layers, DeepSeek-style)
+  ssm (falcon-mamba)   : scan over [norm->Mamba] blocks
+  hybrid (r.gemma)     : unrolled (RG-LRU, RG-LRU, local-attn) pattern
+  audio (whisper)      : encoder scan + decoder scan with cross-attention
+
+Entry points (all pure):
+  init(key)                          -> params
+  train_logits(params, batch)        -> (logits, aux_loss)
+  prefill(params, batch)             -> (logits, cache)
+  decode_step(params, cache, batch)  -> (logits, cache)
+
+Homogeneous stacks use stacked parameters + ``lax.scan`` over layers
+(compile-time O(1) in depth); caches are stacked along the same leading
+layer axis and scanned jointly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, common, mlp, rglru, ssm
+from repro.models.common import shard
+
+Params = Any
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _norm(cfg):
+    if cfg.norm_kind == "layernorm":
+        return common.init_layernorm, common.layernorm
+    return common.init_rmsnorm, common.rmsnorm
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = _dtype(cfg)
+        self.init_norm, self.apply_norm = _norm(cfg)
+
+    # ------------------------------------------------------------- init --
+    def _init_block(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {"norm1": self.init_norm(cfg.d_model)}
+        if cfg.ssm:
+            p["mixer"] = ssm.init_mamba(ks[0], cfg, self.dtype)
+            return p                                   # mamba has fused mlp
+        if cfg.mla:
+            p["mixer"] = attention.init_mla(ks[0], cfg, self.dtype)
+        else:
+            p["mixer"] = attention.init_attention(ks[0], cfg, self.dtype)
+        p["norm2"] = self.init_norm(cfg.d_model)
+        if cfg.moe:
+            p["ffn"] = mlp.init_moe(ks[1], cfg, self.dtype)
+        else:
+            p["ffn"] = mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                    self.dtype, cfg.mlp_kind)
+        return p
+
+    def _init_dense_block(self, key) -> dict:
+        """Dense-FFN block for DeepSeek's leading layers."""
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        p = {"norm1": self.init_norm(cfg.d_model),
+             "norm2": self.init_norm(cfg.d_model)}
+        p["mixer"] = (attention.init_mla(ks[0], cfg, self.dtype) if cfg.mla
+                      else attention.init_attention(ks[0], cfg, self.dtype))
+        p["ffn"] = mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff, self.dtype,
+                                "swiglu")
+        return p
+
+    def _init_rglru_block(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {"norm1": self.init_norm(cfg.d_model),
+                "mixer": rglru.init_rglru(ks[0], cfg, self.dtype),
+                "norm2": self.init_norm(cfg.d_model),
+                "ffn": mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                    self.dtype, cfg.mlp_kind)}
+
+    def _init_enc_block(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {"norm1": self.init_norm(cfg.d_model),
+                "mixer": attention.init_attention(ks[0], cfg, self.dtype),
+                "norm2": self.init_norm(cfg.d_model),
+                "ffn": mlp.init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                    self.dtype, cfg.mlp_kind)}
+
+    def _init_dec_block(self, key) -> dict:
+        p = self._init_enc_block(key)
+        cfg = self.cfg
+        p["norm_x"] = self.init_norm(cfg.d_model)
+        p["cross"] = attention.init_attention(
+            jax.random.fold_in(key, 7), cfg, self.dtype)
+        return p
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kemb, khead, kblocks = jax.random.split(key, 3)
+        params: dict = {
+            "embed": shard(common.embed_init(kemb, cfg.vocab_size,
+                                             cfg.d_model, self.dtype),
+                           common.MODEL, common.FSDP),
+            "final_norm": self.init_norm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = shard(
+                common.dense_init(khead, (cfg.d_model, cfg.vocab_size),
+                                  self.dtype),
+                common.FSDP, common.MODEL)
+
+        def stack(init_fn, n, key):
+            keys = jax.random.split(key, n)
+            return jax.vmap(init_fn)(keys)
+
+        if cfg.encoder_decoder:
+            k1, k2 = jax.random.split(kblocks)
+            params["encoder"] = stack(self._init_enc_block,
+                                      cfg.num_encoder_layers, k1)
+            params["decoder"] = stack(self._init_dec_block,
+                                      cfg.num_layers, k2)
+            params["enc_norm"] = self.init_norm(cfg.d_model)
+        elif cfg.hybrid:
+            keys = jax.random.split(kblocks, cfg.num_layers)
+            params["blocks"] = [
+                (self._init_enc_block(keys[i]) if i % 3 == 2
+                 else self._init_rglru_block(keys[i]))
+                for i in range(cfg.num_layers)]
+        elif cfg.moe and cfg.first_dense_layers:
+            k1, k2 = jax.random.split(kblocks)
+            params["dense_blocks"] = stack(self._init_dense_block,
+                                           cfg.first_dense_layers, k1)
+            params["blocks"] = stack(
+                self._init_block, cfg.num_layers - cfg.first_dense_layers,
+                k2)
+        else:
+            params["blocks"] = stack(self._init_block, cfg.num_layers,
+                                     kblocks)
+        return params
+
+    # ------------------------------------------------------- embeddings --
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.frontend == "vision" and "vision_embeds" in batch:
+            # Modality stub: precomputed patch embeddings replace the token
+            # embeddings at positions flagged by the frontend.
+            mask = batch["vision_mask"][..., None]
+            x = jnp.where(mask, batch["vision_embeds"].astype(x.dtype), x)
+        if cfg.positional == "sinusoidal":
+            x = x + _sinusoid_at(batch["positions"],
+                                 cfg.d_model).astype(x.dtype)
+        return shard(x, common.BATCH, None, None)
+
+    def _positions(self, batch):
+        if self.cfg.positional == "mrope":
+            return batch["positions3"]
+        return batch["positions"]
+
+    # ------------------------------------------------------------ blocks --
+    def _block_apply(self, p, x, positions, *, causal=True, window_every=None,
+                     impl=None):
+        """Standard (attn/mla + ffn) block; returns (x, kv, aux)."""
+        cfg = self.cfg
+        h = self.apply_norm(p["norm1"], x, cfg.norm_eps)
+        if cfg.mla:
+            att, kv = attention.mla_attention(p["mixer"], cfg, h, positions,
+                                              causal=causal)
+        else:
+            att, kv = attention.attention(
+                p["mixer"], cfg, h, positions, causal=causal,
+                impl=impl or cfg.attn_impl)
+        x = x + att
+        h = self.apply_norm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe and "router" in p["ffn"]:
+            out, aux = mlp.moe(p["ffn"], cfg, h)
+        else:
+            out, aux = mlp.mlp(p["ffn"], h, cfg.mlp_kind), 0.0
+        return x + out, kv, aux
+
+    # ------------------------------------------------------------- train --
+    def train_logits(self, params, batch):
+        """Full-sequence forward. Returns (logits, moe_aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = self._positions(batch)
+        aux_total = 0.0
+
+        if cfg.encoder_decoder:
+            enc = batch["audio_embeds"].astype(self.dtype)
+            enc = enc + _sinusoid_at(
+                jnp.broadcast_to(jnp.arange(enc.shape[1])[None],
+                                 enc.shape[:2]), cfg.d_model
+            ).astype(enc.dtype)
+            enc = shard(enc, common.BATCH, None, None)
+
+            @jax.checkpoint
+            def enc_step(h, bp):
+                h2, _, _ = self._block_apply(bp, h, positions, causal=False)
+                return h2, None
+            enc, _ = jax.lax.scan(enc_step, enc, params["encoder"])
+            enc = self.apply_norm(params["enc_norm"], enc, cfg.norm_eps)
+
+            @jax.checkpoint
+            def dec_step(h, bp):
+                hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                att, _ = attention.attention(bp["mixer"], cfg, hh, positions,
+                                             causal=True)
+                h = h + att
+                hh = self.apply_norm(bp["norm_x"], h, cfg.norm_eps)
+                xat, _ = attention.attention(bp["cross"], cfg, hh, positions,
+                                             causal=False, kv_input=enc)
+                h = h + xat
+                hh = self.apply_norm(bp["norm2"], h, cfg.norm_eps)
+                h = h + mlp.mlp(bp["ffn"], hh, cfg.mlp_kind)
+                return h, None
+            x, _ = jax.lax.scan(dec_step, x, params["decoder"])
+
+        elif cfg.ssm:
+            @jax.checkpoint
+            def blk(h, bp):
+                hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                out, _ = ssm.mamba(bp["mixer"], cfg, hh)
+                return h + out, None
+            x, _ = jax.lax.scan(blk, x, params["blocks"])
+
+        elif cfg.hybrid:
+            for i, bp in enumerate(params["blocks"]):
+                if i % 3 == 2:
+                    x, _, _ = self._block_apply(bp, x, positions)
+                else:
+                    hh = self.apply_norm(bp["norm1"], x, cfg.norm_eps)
+                    out, _ = rglru.rglru(bp["mixer"], cfg, hh)
+                    x = x + out
+                    hh = self.apply_norm(bp["norm2"], x, cfg.norm_eps)
+                    x = x + mlp.mlp(bp["ffn"], hh, cfg.mlp_kind)
+
+        else:
+            if cfg.moe and cfg.first_dense_layers:
+                @jax.checkpoint
+                def dense_blk(h, bp):
+                    h2, _, _ = self._block_apply(bp, h, positions)
+                    return h2, None
+                x, _ = jax.lax.scan(dense_blk, x, params["dense_blocks"])
+
+            @jax.checkpoint
+            def blk(carry, bp):
+                h, aux = carry
+                h2, _, a = self._block_apply(bp, h, positions)
+                return (h2, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(blk, (x, 0.0), params["blocks"])
+
+        x = self.apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._lm_head(params, x)
+        return logits, aux_total
+
+    def _lm_head(self, params, x):
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        return shard(logits, common.BATCH, None, common.MODEL)
+
+    # ----------------------------------------------------------- serving --
+    def init_cache(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = self.dtype
+        b = batch_size
+        if cfg.encoder_decoder:
+            l = cfg.num_layers
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            return {
+                "k": jnp.zeros((l, b, max_len, hkv, hd), dt),
+                "v": jnp.zeros((l, b, max_len, hkv, hd), dt),
+                "ek": jnp.zeros((l, b, cfg.encoder_seq, hkv, hd), dt),
+                "ev": jnp.zeros((l, b, cfg.encoder_seq, hkv, hd), dt),
+            }
+        if cfg.ssm:
+            din = cfg.ssm_expand * cfg.d_model
+            return {
+                "conv": jnp.zeros((cfg.num_layers, b, cfg.ssm_conv - 1, din),
+                                  dt),
+                "h": jnp.zeros((cfg.num_layers, b, din, cfg.ssm_state),
+                               jnp.float32),
+            }
+        if cfg.hybrid:
+            w = cfg.lru_width or cfg.d_model
+            n_att = sum(1 for i in range(cfg.num_layers) if i % 3 == 2)
+            n_rec = cfg.num_layers - n_att
+            wlen = min(max_len, cfg.sliding_window or max_len)
+            return {
+                "conv": jnp.zeros((n_rec, b, 3, w), dt),
+                "h": jnp.zeros((n_rec, b, w), jnp.float32),
+                "k": jnp.zeros((n_att, b, wlen, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((n_att, b, wlen, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+            }
+        if cfg.mla:
+            l = cfg.num_layers
+            return {
+                "c": jnp.zeros((l, b, max_len, cfg.kv_lora_rank), dt),
+                "kr": jnp.zeros((l, b, max_len, cfg.qk_rope_dim), dt),
+            }
+        l = cfg.num_layers
+        return {
+            "k": jnp.zeros((l, b, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dt),
+            "v": jnp.zeros((l, b, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dt),
+        }
+
+    def shard_cache(self, cache: dict) -> dict:
+        """Apply the serving sharding policy: batch over data, long axes
+        (sequence / d_inner) over model."""
+        out = {}
+        for k, v in cache.items():
+            if k in ("k", "v"):          # (L,B,S,H,D): seq -> model
+                out[k] = shard(v, None, common.BATCH, common.MODEL, None,
+                               None)
+            elif k in ("c", "kr"):
+                out[k] = shard(v, None, common.BATCH, common.MODEL, None)
+            elif k in ("ek", "ev"):
+                out[k] = shard(v, None, common.BATCH, None, common.MODEL,
+                               None)
+            elif k == "conv":
+                out[k] = shard(v, None, common.BATCH, None, common.MODEL)
+            elif k == "h":
+                out[k] = shard(v, None, common.BATCH, common.MODEL)
+            else:
+                out[k] = v
+        return out
+
+    def decode_step(self, params, cache, batch):
+        """One-token decode. batch: tokens (B,1), positions (B,1) (or
+        positions3 (3,B,1)), plus encoder state for enc-dec. Returns
+        (logits (B,1,V), new_cache)."""
+        with common.decode_layout():
+            return self._decode_step(params, cache, batch)
+
+    def _decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = self._positions(batch)
+        new_cache = dict(cache)
+
+        if cfg.encoder_decoder:
+            def step(h, xs):
+                bp, ck, cv, cek, cev = xs
+                hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                att, nk, nv = attention.decode_attention(
+                    bp["mixer"], cfg, hh, positions, ck, cv, None)
+                h = h + att
+                hh = self.apply_norm(bp["norm_x"], h, cfg.norm_eps)
+                h = h + attention.decode_cross_attention(
+                    bp["cross"], cfg, hh, cek, cev)
+                hh = self.apply_norm(bp["norm2"], h, cfg.norm_eps)
+                h = h + mlp.mlp(bp["ffn"], hh, cfg.mlp_kind)
+                return h, (nk, nv)
+            x, (nk, nv) = jax.lax.scan(
+                step, x, (params["decoder"], cache["k"], cache["v"],
+                          cache["ek"], cache["ev"]))
+            new_cache.update(k=nk, v=nv)
+
+        elif cfg.ssm:
+            def step(h, xs):
+                bp, conv, hst = xs
+                hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                out, (nc, nh) = ssm.mamba_decode(bp["mixer"], cfg, hh,
+                                                 (conv, hst))
+                return h + out, (nc, nh)
+            x, (nc, nh) = jax.lax.scan(
+                step, x, (params["blocks"], cache["conv"], cache["h"]))
+            new_cache.update(conv=nc, h=nh)
+
+        elif cfg.hybrid:
+            ia = ir = 0
+            ks, vs, convs, hs = [], [], [], []
+            for i, bp in enumerate(params["blocks"]):
+                hh = self.apply_norm(bp["norm1"], x, cfg.norm_eps)
+                if i % 3 == 2:
+                    att, nk, nv = attention.decode_attention(
+                        bp["mixer"], cfg, hh, positions,
+                        cache["k"][ia], cache["v"][ia], None)
+                    x = x + att
+                    ks.append(nk); vs.append(nv); ia += 1
+                else:
+                    out, (nc, nh) = rglru.rglru_decode(
+                        bp["mixer"], cfg, hh,
+                        (cache["conv"][ir], cache["h"][ir]))
+                    x = x + out
+                    convs.append(nc); hs.append(nh); ir += 1
+                hh = self.apply_norm(bp["norm2"], x, cfg.norm_eps)
+                x = x + mlp.mlp(bp["ffn"], hh, cfg.mlp_kind)
+            new_cache.update(k=jnp.stack(ks), v=jnp.stack(vs),
+                             conv=jnp.stack(convs), h=jnp.stack(hs))
+
+        elif cfg.mla:
+            def step(carry, xs):
+                h = carry
+                bp, cc, ckr = xs
+                hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                att, nc, nkr = attention.mla_decode(
+                    bp["mixer"], cfg, hh, positions, cc, ckr, None)
+                h = h + att
+                hh = self.apply_norm(bp["norm2"], h, cfg.norm_eps)
+                if cfg.moe:
+                    out, _ = mlp.moe(bp["ffn"], cfg, hh)
+                else:
+                    out = mlp.mlp(bp["ffn"], hh, cfg.mlp_kind)
+                return h + out, (nc, nkr)
+
+            off = cfg.first_dense_layers
+            if off:
+                def dstep(h, xs):
+                    bp, cc, ckr = xs
+                    hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                    att, nc, nkr = attention.mla_decode(
+                        bp["mixer"], cfg, hh, positions, cc, ckr, None)
+                    h = h + att
+                    hh = self.apply_norm(bp["norm2"], h, cfg.norm_eps)
+                    return h + mlp.mlp(bp["ffn"], hh, "swiglu"), (nc, nkr)
+                x, (nc0, nkr0) = jax.lax.scan(
+                    dstep, x, (params["dense_blocks"],
+                               cache["c"][:off], cache["kr"][:off]))
+            x, (nc, nkr) = jax.lax.scan(
+                step, x, (params["blocks"], cache["c"][off:],
+                          cache["kr"][off:]))
+            if off:
+                nc = jnp.concatenate([nc0, nc])
+                nkr = jnp.concatenate([nkr0, nkr])
+            new_cache.update(c=nc, kr=nkr)
+
+        else:
+            def step(carry, xs):
+                h = carry
+                bp, ck, cv = xs
+                hh = self.apply_norm(bp["norm1"], h, cfg.norm_eps)
+                att, nk, nv = attention.decode_attention(
+                    bp["mixer"], cfg, hh, positions, ck, cv, None)
+                h = h + att
+                hh = self.apply_norm(bp["norm2"], h, cfg.norm_eps)
+                if cfg.moe:
+                    out, _ = mlp.moe(bp["ffn"], cfg, hh)
+                else:
+                    out = mlp.mlp(bp["ffn"], hh, cfg.mlp_kind)
+                return h + out, (nk, nv)
+            x, (nk, nv) = jax.lax.scan(
+                step, x, (params["blocks"], cache["k"], cache["v"]))
+            new_cache.update(k=nk, v=nv)
+
+        x = self.apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return self._lm_head(params, x), new_cache
+
+    def prefill(self, params, batch):
+        """Full-prompt forward returning logits (prefill shapes lower this).
+
+        For simplicity and dry-run purposes prefill shares train_logits
+        (same compute); serving examples additionally materialise the cache
+        via init_cache + per-token decode or the returned kv list."""
+        return self.train_logits(params, batch)[0]
+
+
+def _sinusoid_at(positions, d):
+    """Sinusoidal embeddings for arbitrary integer positions (B,S)->(B,S,d)."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.power(10000.0, -2.0 * i / d)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+@functools.lru_cache(maxsize=None)
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

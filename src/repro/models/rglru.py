@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (recurrentgemma-2b), per Griffin (arXiv:2402.19427).
+
+Block = temporal conv1d + gated linear recurrence:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = a ** (c * r_t)                  (a = sigmoid(lambda), c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Same chunked-scan memory strategy as the Mamba block: the recurrent state
+(B, width) is tiny — the architecture embodies the paper's small-working-set
+premise (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import shard
+
+CHUNK = 256
+C_EXP = 8.0
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        # separate projections (same relayout issue as ssm.in_proj)
+        "in_x": common.dense_init(ks[0], (d, w), dtype),
+        "in_z": common.dense_init(jax.random.fold_in(ks[0], 1),
+                                  (d, w), dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (4, w))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": common.dense_init(ks[2], (w, w), dtype),
+        "wx": common.dense_init(ks[3], (w, w), dtype),
+        "ba": jnp.full((w,), 2.0, jnp.float32),     # init toward remembering
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 3.0, jnp.float32),    # a = sigmoid(lam) ~ 0.95
+        "out_proj": common.dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _conv1d(p, x, prev_tail=None):
+    w = p["conv_w"]
+    kk = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+           if prev_tail is None else prev_tail)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kk))
+    return out + p["conv_b"], xp[:, -(kk - 1):]
+
+
+def _gates(p, xc):
+    """xc: (B,S,w) -> log_a (B,S,w) f32, gated input (B,S,w) f32."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["wa"]
+                                  ).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["wx"]
+                                  ).astype(jnp.float32) + p["bx"])
+    log_a = C_EXP * r * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * xf)
+    return a, gated
+
+
+def rglru(p, cfg, x, state=None):
+    """Full-sequence RG-LRU. x: (B,S,d). Returns (out, (conv_tail, h))."""
+    b, s, d = x.shape
+    w = cfg.lru_width or d
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs = shard(xs, common.BATCH, None, common.MODEL)
+    z = shard(z, common.BATCH, None, common.MODEL)
+    conv_tail = state[0] if state is not None else None
+    xc, new_tail = _conv1d(p, xs, conv_tail)
+    a, gated = _gates(p, xc)
+
+    h0 = (state[1] if state is not None else jnp.zeros((b, w), jnp.float32))
+    pad = (-s) % CHUNK
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gated = jnp.pad(gated, ((0, 0), (0, pad), (0, 0)))
+    nchunks = (s + pad) // CHUNK
+    a_c = a.reshape(b, nchunks, CHUNK, w).transpose(1, 0, 2, 3)
+    g_c = gated.reshape(b, nchunks, CHUNK, w).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def chunk_step(h, inputs):
+        ac, gc = inputs
+
+        def step(hh, t):
+            hh = ac[:, t] * hh + gc[:, t]
+            return hh, hh
+        return jax.lax.scan(step, h, jnp.arange(CHUNK))
+
+    h_final, hs = jax.lax.scan(chunk_step, h0, (a_c, g_c))
+    hs = hs.reshape(nchunks * CHUNK, b, w).transpose(1, 0, 2)[:, :s]
+    y = (hs * jax.nn.gelu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, common.BATCH, None, common.MODEL)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"])
+    return shard(out, common.BATCH, None, None), (new_tail, h_final)
+
+
+def rglru_decode(p, cfg, x, state):
+    """Single-token step. state = (conv_tail (B,3,w), h (B,w))."""
+    conv_tail, h = state
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xc, new_tail = _conv1d(p, xs, conv_tail)
+    a, gated = _gates(p, xc)
+    h = a[:, 0] * h + gated[:, 0]
+    y = (h[:, None] * jax.nn.gelu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"])
+    return shard(out, common.BATCH, None, None), (new_tail, h)

@@ -1,0 +1,156 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Training/prefill uses a two-level (chunked) time scan.  The (B, d_inner, n)
+state tensors — dA, dBx — are formed *inside* the scan step from the
+(B, d_inner) / (B, n) per-step projections, so nothing of size S x d_inner x
+n is ever materialised (at train_4k scale that tensor would be ~550 GB).
+The outer scan checkpoints chunk boundaries; inner-chunk states are
+rematerialised in the backward pass.  Decode is a single recurrence step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import shard
+
+CHUNK = 256
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 7)
+    return {
+        # Separate x/z projections: a fused (d, 2*din) matrix split along the
+        # model-sharded output dim forces a cross-shard relayout (two
+        # collective-permutes of the full activation per layer; §Perf H3b).
+        "in_x": common.dense_init(ks[0], (d, din), dtype),
+        "in_z": common.dense_init(jax.random.fold_in(ks[0], 1),
+                                  (d, din), dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            ks[1], (cfg.ssm_conv, din))).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": common.dense_init(ks[2], (din, dt_rank + 2 * n), dtype),
+        "dt_proj": common.dense_init(ks[3], (dt_rank, din), dtype),
+        "dt_bias": jnp.zeros((din,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None], (din, 1))),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": common.dense_init(ks[5], (din, d), dtype, fan_in=din),
+    }
+
+
+def _conv1d(p, x, prev_tail=None):
+    """Causal depthwise conv along time. x: (B,S,din)."""
+    w = p["conv_w"]                                   # (K, din)
+    kk = w.shape[0]
+    if prev_tail is None:
+        pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prev_tail
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, din)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kk))
+    return jax.nn.silu(out + p["conv_b"]), xp[:, -(kk - 1):]
+
+
+def _step_projections(p, cfg, xc):
+    """Per-step scan inputs (small tensors only).
+    xc: (B,S,din) -> dt (B,S,din) f32, b_t/c_t (B,S,n) f32."""
+    n = cfg.ssm_state
+    dt_rank = max(cfg.d_model // 16, 1)
+    proj = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"])
+    dt_r, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])
+    return dt, b_t.astype(jnp.float32), c_t.astype(jnp.float32)
+
+
+def _recurrence(A, h, dt_t, b_t, c_t, xc_t):
+    """One SSM step; forms (B,din,n) terms transiently.
+    h: (B,din,n); dt_t/xc_t: (B,din); b_t/c_t: (B,n)."""
+    dA = jnp.exp(dt_t[..., None] * A)                      # (B,din,n)
+    dBx = (dt_t * xc_t)[..., None] * b_t[:, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, c_t)                   # (B,din)
+    return h, y
+
+
+def mamba(p, cfg, x, state=None):
+    """Full-sequence Mamba block. x: (B,S,d). Returns (out, (conv_tail,
+    ssm_state)) for decode continuation."""
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xs = shard(xs, common.BATCH, None, common.MODEL)
+    z = shard(z, common.BATCH, None, common.MODEL)
+    conv_tail = state[0] if state is not None else None
+    xc, new_tail = _conv1d(p, xs, conv_tail)
+    dt, b_t, c_t = _step_projections(p, cfg, xc)
+    xc_f = xc.astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])                               # (din, n)
+
+    h0 = (state[1] if state is not None else
+          jnp.zeros((b, din, cfg.ssm_state), jnp.float32))
+    h0 = shard(h0, common.BATCH, common.MODEL, None)
+
+    pad = (-s) % CHUNK
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+        xc_f = jnp.pad(xc_f, ((0, 0), (0, pad), (0, 0)))
+    nchunks = (s + pad) // CHUNK
+
+    def to_chunks(t):                                      # (C,B,CHUNK,...)
+        return (t.reshape(b, nchunks, CHUNK, -1)
+                .transpose(1, 0, 2, 3))
+
+    chunk_in = tuple(map(to_chunks, (dt, b_t, c_t, xc_f)))
+
+    @jax.checkpoint
+    def chunk_step(h, inputs):
+        dtc, btc, ctc, xcc = inputs                        # (B,CHUNK,*)
+
+        def step(hh, t):
+            hh, y = _recurrence(A, hh, dtc[:, t], btc[:, t], ctc[:, t],
+                                xcc[:, t])
+            # Pin the state sharding: without this the partitioner
+            # alternates layouts across timesteps, inserting two
+            # collective-permutes per step (~527k collectives / 86 GB on
+            # falcon-mamba train_4k; EXPERIMENTS.md §Perf H3).
+            hh = shard(hh, common.BATCH, common.MODEL, None)
+            return hh, y
+        h, ys = jax.lax.scan(step, h, jnp.arange(CHUNK))
+        return h, ys                                       # ys: (CHUNK,B,din)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, chunk_in)
+    y = ys.reshape(nchunks * CHUNK, b, din).transpose(1, 0, 2)[:, :s]
+    y = y + p["d_skip"] * xc_f[:, :s]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, common.BATCH, None, common.MODEL)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return shard(out, common.BATCH, None, None), (new_tail, h_final)
+
+
+def mamba_decode(p, cfg, x, state):
+    """Single-token step. x: (B,1,d); state = (conv_tail (B,K-1,din),
+    ssm_state (B,din,n))."""
+    conv_tail, h = state
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xc, new_tail = _conv1d(p, xs, conv_tail)
+    dt, b_t, c_t = _step_projections(p, cfg, xc)
+    A = -jnp.exp(p["a_log"])
+    h, y = _recurrence(A, h, dt[:, 0], b_t[:, 0], c_t[:, 0],
+                       xc[:, 0].astype(jnp.float32))
+    y = y[:, None] + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return shard(out, common.BATCH, None, None), (new_tail, h)

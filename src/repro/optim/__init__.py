@@ -1,0 +1,3 @@
+from repro.optim import adamw
+from repro.optim.adamw import OptConfig
+__all__ = ["adamw", "OptConfig"]

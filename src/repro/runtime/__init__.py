@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import (Heartbeat, RestartPolicy,
+                                           StragglerPolicy)
+__all__ = ["Heartbeat", "RestartPolicy", "StragglerPolicy"]

@@ -1,0 +1,57 @@
+"""RVV-lite benchmark suite — the nine applications of the paper's Table 2."""
+
+from __future__ import annotations
+
+from repro.rvv import (common, conv2d, dropout, flashattention2, gemm, gemv,
+                       jacobi2d, pathfinder, somier)
+from repro.rvv.common import Benchmark, Built, check
+
+BENCHMARKS: dict[str, Benchmark] = {
+    "pathfinder": Benchmark(
+        "pathfinder", "Grid Traversal", pathfinder.build,
+        pathfinder.scalar_cost, pathfinder.PAPER, pathfinder.REDUCED,
+        "Rows:32 Columns:32"),
+    "jacobi2d": Benchmark(
+        "jacobi2d", "Engineering", jacobi2d.build, jacobi2d.scalar_cost,
+        jacobi2d.PAPER, jacobi2d.REDUCED, "Problem size:128 steps:10"),
+    "somier": Benchmark(
+        "somier", "Physics Simulation", somier.build, somier.scalar_cost,
+        somier.PAPER, somier.REDUCED, "Problem size:32 steps:2"),
+    "gemv": Benchmark(
+        "gemv", "NLP", gemv.build, gemv.scalar_cost, gemv.PAPER,
+        gemv.REDUCED, "(512 x 512) x 512"),
+    "dropout": Benchmark(
+        "dropout", "ML", dropout.build, dropout.scalar_cost, dropout.PAPER,
+        dropout.REDUCED, "Vector Length:131072 Scale:0.5"),
+    "conv2d_7x7": Benchmark(
+        "conv2d_7x7", "CNN", conv2d.build, conv2d.scalar_cost, conv2d.PAPER,
+        conv2d.REDUCED, "256 x 256 filter size:7"),
+    "densenet121_l105": Benchmark(
+        "densenet121_l105", "CNN", gemm.build, gemm.scalar_cost,
+        gemm.DENSENET, gemm.REDUCED, "(32 x 1152)x(1152 x 64)"),
+    "resnet50_l10": Benchmark(
+        "resnet50_l10", "CNN", gemm.build, gemm.scalar_cost, gemm.RESNET,
+        gemm.REDUCED, "(128 x 256)x(256 x 784)"),
+    "flashattention2": Benchmark(
+        "flashattention2", "Transformer", flashattention2.build,
+        flashattention2.scalar_cost, flashattention2.PAPER,
+        flashattention2.REDUCED,
+        "Seq. Length:200 Hidden Dim.:64 Block row:1 Block col:128"),
+}
+
+# The paper's Table 3 reference numbers, for side-by-side reporting.
+PAPER_TABLE3 = {
+    "pathfinder": dict(speedup=7.99, active_regs=6, util=0.18),
+    "jacobi2d": dict(speedup=6.48, active_regs=7, util=0.21),
+    "somier": dict(speedup=7.82, active_regs=14, util=0.44),
+    "gemv": dict(speedup=6.89, active_regs=9, util=0.28),
+    "dropout": dict(speedup=4.3, active_regs=3, util=0.09),
+    "conv2d_7x7": dict(speedup=7.74, active_regs=15, util=0.47),
+    "densenet121_l105": dict(speedup=7.82, active_regs=4, util=0.12),
+    "resnet50_l10": dict(speedup=7.63, active_regs=4, util=0.12),
+    "flashattention2": dict(speedup=7.91, active_regs=32, util=1.00),
+}
+
+__all__ = ["BENCHMARKS", "PAPER_TABLE3", "Benchmark", "Built", "check",
+           "common", "conv2d", "dropout", "flashattention2", "gemm", "gemv",
+           "jacobi2d", "pathfinder", "somier"]

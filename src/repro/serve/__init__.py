@@ -1,0 +1,5 @@
+from repro.serve import engine, kvcache
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import DispersedKVPool, PagePoolConfig
+__all__ = ["engine", "kvcache", "Request", "ServeEngine",
+           "DispersedKVPool", "PagePoolConfig"]

@@ -1,0 +1,127 @@
+"""Dispersed KV cache: the paper's Register Dispersion mechanism applied to
+serving-time KV pages (DESIGN.md §2.B).
+
+Mapping of the paper's concepts:
+
+  architectural vector registers  ->  logical KV pages (page_size tokens)
+  compact VRF (cVRF)              ->  hot page pool in fast memory
+  reserved per-register address   ->  each logical page's fixed slot in the
+                                      cold (host/HBM-overflow) region
+  v0 pinned                       ->  attention-sink pages pinned hot
+  FIFO replacement                ->  same policies module as the cVRF
+
+The pool controller is the *same* victim-selection code (`core.policies`)
+driving the hardware simulator, so the paper's policy results (FIFO is
+enough; Fig 4/5) transfer measurably: `stats()` reports hit rates that the
+serving benchmark compares against the cVRF curves.
+
+This is a host-side controller managing device arrays; on a real cluster the
+cold region lives in host RAM and transfers overlap decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies
+
+
+@dataclasses.dataclass
+class PagePoolConfig:
+    num_logical_pages: int          # "architectural registers"
+    num_hot_pages: int              # "compact VRF" capacity
+    page_shape: tuple               # per-page array shape, e.g. (P, Hkv, D)
+    policy: int = policies.FIFO
+    pin_first: int = 1              # attention sinks (the v0 analogue)
+    dtype: str = "bfloat16"
+
+
+class DispersedKVPool:
+    """Hot pool + cold overflow, FIFO/LRU/OPT-policied, per KV tensor."""
+
+    def __init__(self, cfg: PagePoolConfig):
+        assert cfg.num_hot_pages >= 2 + cfg.pin_first
+        self.cfg = cfg
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.hot = jnp.zeros((cfg.num_hot_pages,) + cfg.page_shape, dt)
+        self.cold = jnp.zeros((cfg.num_logical_pages,) + cfg.page_shape, dt)
+        n = cfg.num_hot_pages
+        self.tags = np.full(n, -1, np.int64)
+        self.dirty = np.zeros(n, bool)
+        self.ins_seq = np.zeros(n, np.int64)
+        self.last_use = np.zeros(n, np.int64)
+        self.freq = np.zeros(n, np.int64)
+        self.next_use = np.zeros(n, np.int64)
+        self.pinned = np.zeros(n, bool)
+        self._seq = 0
+        self._now = 0
+        self.hits = self.misses = self.spills = self.fills = 0
+
+    # ------------------------------------------------------------- cache --
+    def _slot_of(self, page: int) -> int | None:
+        w = np.nonzero(self.tags == page)[0]
+        return int(w[0]) if w.size else None
+
+    def acquire(self, page: int, *, write: bool) -> int:
+        """Make logical ``page`` hot; returns its hot-slot index."""
+        assert 0 <= page < self.cfg.num_logical_pages
+        self._now += 1
+        s = self._slot_of(page)
+        if s is not None:
+            self.hits += 1
+            self.last_use[s] = self._now
+            self.freq[s] += 1
+            self.dirty[s] |= write
+            return s
+        self.misses += 1
+        free = np.nonzero(self.tags < 0)[0]
+        if free.size:
+            s = int(free[0])
+        else:
+            s = policies.np_select_victim(
+                self.tags, self.ins_seq, self.last_use, self.freq,
+                self.next_use, self.pinned, self.cfg.num_hot_pages,
+                self.cfg.policy)
+            if self.dirty[s]:
+                self.cold = self.cold.at[int(self.tags[s])].set(self.hot[s])
+                self.spills += 1
+        self.hot = self.hot.at[s].set(self.cold[page])
+        self.fills += 1
+        self.tags[s] = page
+        self.dirty[s] = write
+        self._seq += 1
+        self.ins_seq[s] = self._seq
+        self.last_use[s] = self._now
+        self.freq[s] = 1
+        self.pinned[s] = page < self.cfg.pin_first
+        return s
+
+    def read(self, page: int) -> jnp.ndarray:
+        s = self.acquire(page, write=False)   # may rebind self.hot (fill)
+        return self.hot[s]
+
+    def write(self, page: int, value) -> None:
+        s = self.acquire(page, write=True)
+        self.hot = self.hot.at[s].set(value.astype(self.hot.dtype))
+
+    def flush(self) -> jnp.ndarray:
+        """Spill everything; returns the full logical tensor (cold view)."""
+        for s in range(self.cfg.num_hot_pages):
+            if self.tags[s] >= 0 and self.dirty[s]:
+                self.cold = self.cold.at[int(self.tags[s])].set(self.hot[s])
+                self.dirty[s] = False
+        return self.cold
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return dict(hits=self.hits, misses=self.misses,
+                    hit_rate=self.hits / max(total, 1), spills=self.spills,
+                    fills=self.fills,
+                    hot_bytes=int(np.prod(self.hot.shape))
+                    * self.hot.dtype.itemsize,
+                    cold_bytes=int(np.prod(self.cold.shape))
+                    * self.cold.dtype.itemsize)

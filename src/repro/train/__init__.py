@@ -1,0 +1,3 @@
+from repro.train import train_step, trainer
+from repro.train.trainer import TrainConfig, Trainer
+__all__ = ["train_step", "trainer", "TrainConfig", "Trainer"]

@@ -1,0 +1,100 @@
+"""Training step: microbatched, remat'd, pjit-ready.
+
+``make_train_step(cfg, opt_cfg, microbatches)`` builds a pure function
+  (params, opt_state, err, batch) -> (params', opt_state', err', metrics)
+that the launcher jits with in/out shardings.  Gradient accumulation over
+microbatches overlaps naturally with the compute under XLA; activation
+rematerialisation wraps the per-microbatch loss.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.models.common import shard
+from repro.models import common
+from repro.optim import adamw
+
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, targets):
+    """Token-mean CE in f32; logits (B,S,V) sharded over model on V."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def make_loss_fn(cfg):
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.train_logits(params, batch)
+        loss = cross_entropy(logits, batch["targets"])
+        total = loss + AUX_WEIGHT * aux
+        return total, {"loss": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: adamw.OptConfig, microbatches: int = 1,
+                    remat: bool = False):
+    """Per-layer remat is built into the model (scan bodies are
+    jax.checkpoint'ed); ``remat=True`` additionally remats the whole loss."""
+    loss_fn = make_loss_fn(cfg)
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, err, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(k, x):
+                if k == "positions3":       # (3,B,S) -> (mb, 3, B/mb, S)
+                    return x.reshape(3, microbatches, -1, x.shape[-1]
+                                     ).transpose(1, 0, 2, 3)
+                return x.reshape(microbatches, -1, *x.shape[1:])
+            mbatches = {k: split(k, v) for k, v in batch.items()}
+
+            def acc_step(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + metrics["loss"],
+                        a_acc + metrics["aux"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc_step, (zeros, 0.0, 0.0), mbatches)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {"loss": loss_sum / microbatches,
+                       "aux": aux_sum / microbatches}
+
+        new_params, new_opt, new_err, stats = adamw.apply_updates(
+            opt_cfg, opt_state, params, grads, err)
+        metrics.update(stats)
+        return new_params, new_opt, new_err, metrics
+
+    return train_step
+
+
+def shard_batch_specs(cfg, mesh):
+    """PartitionSpecs for the input batch (batch dim over pod+data)."""
+    from jax.sharding import NamedSharding
+    from repro.models.common import spec
+
+    def for_key(k):
+        if k == "positions3":
+            return NamedSharding(mesh, spec(mesh, None, common.BATCH, None))
+        if k in ("vision_embeds", "audio_embeds"):
+            return NamedSharding(mesh, spec(mesh, common.BATCH, None, None))
+        return NamedSharding(mesh, spec(mesh, common.BATCH, None))
+    return for_key

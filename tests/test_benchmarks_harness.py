@@ -1,0 +1,36 @@
+"""Harness robustness: every benchmark suite's run() yields sane rows at
+reduced event budgets (keeps the paper tables regenerable)."""
+
+import pytest
+
+
+@pytest.mark.parametrize("mod,kw", [
+    ("benchmarks.table3_speedup", {"max_events": 30_000}),
+    ("benchmarks.fig4_cvrf_sweep", {"names": ["dropout"],
+                                    "max_events": 30_000}),
+    ("benchmarks.fig5_min_regs", {"max_events": 30_000}),
+    ("benchmarks.fig6_equal_area", {"max_events": 30_000}),
+    ("benchmarks.fig2_area_model", {}),
+    ("benchmarks.fig8_power", {"max_events": 30_000}),
+    ("benchmarks.vmem_dispersion", {}),
+    ("benchmarks.kv_dispersion", {}),
+    ("benchmarks.ablation_sensitivity", {"max_events": 20_000}),
+])
+def test_suite_produces_rows(mod, kw):
+    m = __import__(mod, fromlist=["run"])
+    rows = m.run(**kw)
+    assert len(rows) > 0
+    for r in rows:
+        assert "name" in r
+
+
+def test_roofline_report_over_results():
+    import os
+    import benchmarks.roofline as rl
+    if not os.path.isdir(rl.RESULTS):
+        pytest.skip("no sweep results present")
+    rows = rl.run("single")
+    assert any(r.get("status") == "ok" for r in rows)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        assert r["bottleneck"] in ("compute", "memory", "collective")

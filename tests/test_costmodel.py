@@ -1,0 +1,32 @@
+"""Area/power model: calibration identities + untuned predictions."""
+
+from repro.core import costmodel
+
+
+def test_baseline_breakdown_matches_paper():
+    full = costmodel.cpu_area(32)
+    assert abs(100 * full.vrf / full.vpu - 61.0) < 0.5          # Fig 2
+    assert abs(100 * full.vpu / full.total - 43.4) < 0.5        # derived
+
+
+def test_savings_predictions_match_paper():
+    full = costmodel.cpu_area(32)
+    cvrf = costmodel.cpu_area(8, dispersed=True)
+    red = full.vrf / (cvrf.vrf + cvrf.dispersion_overhead)
+    assert abs(red - 3.5) < 0.1                                 # 3.5x
+    assert abs(100 * (1 - cvrf.vpu / full.vpu) - 53.0) < 1.0    # 53%
+    assert abs(100 * (1 - cvrf.total / full.total) - 23.0) < 1.0  # 23%
+
+
+def test_narrow_vrf_is_equal_area():
+    # Fig 6 premise: 8 x 256-bit ~= 32 x 64-bit in area.
+    cvrf = costmodel.cpu_area(8, vlen_bits=256, dispersed=True)
+    narrow = costmodel.cpu_area(32, vlen_bits=64)
+    assert abs(cvrf.vrf - narrow.vrf) / narrow.vrf < 0.15
+
+
+def test_power_components_positive():
+    counters = dict(reg_reads=1000, reg_writes=500, l1_hits=300,
+                    l1_misses=20, mem_reads=100, mem_writes=50, cycles=2000)
+    p = costmodel.application_power(counters, 32, 2000)
+    assert p["total"] > 0 and p["leakage"] > 0 and p["dynamic"] > 0

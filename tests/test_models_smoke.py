@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of the same family runs one forward/train step and one decode step on CPU,
+asserting output shapes and the absence of NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import get_model
+
+B, S = 2, 16
+
+
+def _batch(cfg, s=S, decode=False):
+    b = B
+    sl = 1 if decode else s
+    pos = (jnp.full((b, 1), 5, jnp.int32) if decode else
+           jnp.broadcast_to(jnp.arange(sl)[None], (b, sl)).astype(jnp.int32))
+    batch = {"tokens": jnp.full((b, sl), 3, jnp.int32), "positions": pos}
+    if cfg.positional == "mrope":
+        batch["positions3"] = jnp.broadcast_to(pos[None], (3, b, sl))
+    if cfg.encoder_decoder and not decode:
+        batch["audio_embeds"] = jnp.full(
+            (b, cfg.encoder_seq, cfg.d_model), 0.01, jnp.float32)
+    if cfg.frontend == "vision" and not decode:
+        batch["vision_embeds"] = jnp.full((b, sl, cfg.d_model), 0.01)
+        batch["vision_mask"] = jnp.zeros((b, sl), bool).at[:, :4].set(True)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_forward(name):
+    cfg = ARCHS[name].reduced()
+    mdl = get_model(cfg)
+    params = mdl.init(jax.random.PRNGKey(0))
+    logits, aux = mdl.train_logits(params, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    assert float(aux) >= 0.0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_step(name):
+    cfg = ARCHS[name].reduced()
+    mdl = get_model(cfg)
+    params = mdl.init(jax.random.PRNGKey(0))
+    cache = mdl.init_cache(B, max_len=32)
+    if cfg.encoder_decoder:
+        cache["ek"] = jnp.full(cache["ek"].shape, 0.01, cache["ek"].dtype)
+        cache["ev"] = jnp.full(cache["ev"].shape, 0.01, cache["ev"].dtype)
+    logits, cache2 = mdl.decode_step(params, cache, _batch(cfg, decode=True))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    for k in cache:
+        assert cache2[k].shape == cache[k].shape
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "falcon-mamba-7b",
+                                  "recurrentgemma-2b",
+                                  "deepseek-v2-lite-16b"])
+def test_prefill_decode_consistency(name):
+    """Sequential decode through the cache must reproduce the full-sequence
+    (prefill) logits — validates every cache/state update path (GQA ring,
+    SSM recurrence, RG-LRU/window hybrid, MLA latent cache)."""
+    import dataclasses
+    cfg = dataclasses.replace(ARCHS[name].reduced(), dtype="float32")
+    if cfg.moe:
+        # Capacity-based routing legitimately differs between full-sequence
+        # and per-token dispatch (different group capacities); disable MoE so
+        # this test isolates the MLA latent-cache path.
+        cfg = dataclasses.replace(cfg, moe=False, num_experts=0,
+                                  moe_top_k=0, first_dense_layers=0)
+    mdl = get_model(cfg)
+    params = mdl.init(jax.random.PRNGKey(1))
+    s = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, s), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens,
+             "positions": jnp.arange(s, dtype=jnp.int32)[None]}
+    full_logits, _ = mdl.train_logits(params, batch)
+
+    cache = mdl.init_cache(1, max_len=max(s, cfg.sliding_window or s))
+    outs = []
+    for t in range(s):
+        b = {"tokens": tokens[:, t:t + 1],
+             "positions": jnp.full((1, 1), t, jnp.int32)}
+        logits, cache = mdl.decode_step(params, cache, b)
+        outs.append(np.asarray(logits[0, 0], np.float32))
+    got = np.stack(outs)
+    want = np.asarray(full_logits[0], np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_reduced_param_counts_small():
+    for name, cfg in ARCHS.items():
+        r = cfg.reduced()
+        assert r.param_count() < 30e6, name

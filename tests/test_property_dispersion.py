@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for the system's core invariants:
+
+1. Register Dispersion is semantics-preserving: for ANY program and ANY
+   capacity >= 3 and ANY policy, dispersed execution == full-VRF execution.
+2. LRU hit rate is monotonically non-decreasing in capacity (stack property;
+   note FIFO may exhibit Belady's anomaly, so no such claim for FIFO).
+3. Belady-OPT hit rate >= FIFO and >= LRU at equal capacity.
+4. If capacity >= #active registers, misses == compulsory fills only.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except Exception:                                     # pragma: no cover
+    HAVE_HYP = False
+
+from repro.core import events, interpreter, isa, policies, simulator
+from repro.core.trace import Assembler, MemoryMap
+
+pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+
+
+@st.composite
+def programs(draw):
+    """Random straight-line RVV-lite programs over a small memory."""
+    n_instr = draw(st.integers(4, 60))
+    n_bufs = 4
+    mm = MemoryMap()
+    bases = [mm.alloc(f"b{i}", np.arange(32, dtype=np.float32) + i)
+             for i in range(n_bufs)]
+    a = Assembler("rand")
+    reg = lambda: draw(st.integers(1, 12))
+    for _ in range(n_instr):
+        op = draw(st.integers(0, 7))
+        addr = (draw(st.sampled_from(bases))
+                + 32 * draw(st.integers(0, 2)))
+        if op == 0:
+            a.vle(reg(), addr)
+        elif op == 1:
+            a.vse(reg(), addr)
+        elif op == 2:
+            a.vadd(reg(), reg(), reg())
+        elif op == 3:
+            a.vmul(reg(), reg(), reg())
+        elif op == 4:
+            a.vmacc(reg(), reg(), reg())
+        elif op == 5:
+            a.vmslt(reg(), reg())
+        elif op == 6:
+            a.vmerge(reg(), reg(), reg())
+        else:
+            a.vmax(reg(), reg(), reg())
+    return a.finalize(mm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(programs(), st.integers(3, 12),
+       st.sampled_from([policies.FIFO, policies.LRU, policies.LFU,
+                        policies.OPT]))
+def test_dispersion_semantics_preserving(prog, capacity, policy):
+    full = interpreter.run(prog)
+    disp = interpreter.run_dispersed(prog, capacity, policy)
+    np.testing.assert_array_equal(full.memory, disp.memory)
+    np.testing.assert_array_equal(full.vregs, disp.vregs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(programs())
+def test_lru_hit_rate_monotone_in_capacity(prog):
+    caps = [3, 4, 6, 8, 12]
+    sweep = simulator.SweepConfig.make(caps, policies.LRU)
+    out = simulator.simulate_sweep(prog, sweep)
+    hits = out["vrf_hits"]
+    assert all(hits[i] <= hits[i + 1] for i in range(len(caps) - 1))
+
+
+@settings(max_examples=15, deadline=None)
+@given(programs(), st.integers(3, 8))
+def test_opt_dominates_online_policies(prog, cap):
+    res = {}
+    for pol in (policies.FIFO, policies.LRU, policies.OPT):
+        res[pol] = simulator.simulate_one(prog, cap, pol)["vrf_hits"]
+    assert res[policies.OPT] >= res[policies.FIFO]
+    assert res[policies.OPT] >= res[policies.LRU]
+
+
+@settings(max_examples=15, deadline=None)
+@given(programs())
+def test_sufficient_capacity_means_compulsory_only(prog):
+    active = [r for r in prog.active_vregs() if r != isa.MASK_REG]
+    cap = max(len(active), 3)
+    out = simulator.simulate_one(prog, cap)
+    assert out["vrf_misses"] == len(active)
+    assert out["spills"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(programs(), st.integers(3, 10))
+def test_simulator_and_interpreter_agree_on_hit_counts(prog, cap):
+    """The jax cycle simulator and the numpy dispersed interpreter implement
+    the same FIFO mechanism — their hit/miss/spill counters must agree."""
+    disp = interpreter.run_dispersed(prog, cap, policies.FIFO)
+    sim = simulator.simulate_one(prog, cap, policies.FIFO)
+    assert sim["vrf_hits"] == disp.vrf_hits
+    assert sim["vrf_misses"] == disp.vrf_misses
+    assert sim["spills"] == disp.spills
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(1, 3))
+def test_repeat_expansion_equals_python_loop(n_outer, n_inner, stride_w):
+    """Nested Assembler.repeat must emit exactly what explicit python loops
+    emit (addresses, ops, registers)."""
+    mm1, mm2 = MemoryMap(), MemoryMap()
+    base1 = mm1.alloc("b", 512)
+    base2 = mm2.alloc("b", 512)
+    a1 = Assembler("rep")
+    with a1.repeat(n_outer):
+        with a1.repeat(n_inner):
+            a1.vle(1, base1, stride=4 * stride_w, stride2=64)
+            a1.vadd(2, 1, 1)
+        a1.vse(2, base1 + 256, stride=32)
+    p1 = a1.finalize(mm1)
+
+    a2 = Assembler("loop")
+    for i in range(n_outer):
+        for j in range(n_inner):
+            a2.vle(1, base2 + i * 64 + j * 4 * stride_w)
+            a2.vadd(2, 1, 1)
+        a2.vse(2, base2 + 256 + i * 32)
+    p2 = a2.finalize(mm2)
+
+    np.testing.assert_array_equal(p1.op, p2.op)
+    np.testing.assert_array_equal(p1.addr, p2.addr)
+    np.testing.assert_array_equal(p1.vd, p2.vd)
+    np.testing.assert_array_equal(p1.vs1, p2.vs1)

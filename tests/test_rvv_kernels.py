@@ -1,0 +1,50 @@
+"""Every benchmark kernel (reduced size): interpreter result == reference,
+plus dispersed-interpreter semantic equality and FA-2 sanity vs softmax."""
+
+import numpy as np
+import pytest
+
+from repro import rvv
+from repro.core import interpreter, policies
+from repro.rvv import flashattention2
+
+
+@pytest.mark.parametrize("name", sorted(rvv.BENCHMARKS))
+def test_kernel_matches_reference(name):
+    b = rvv.BENCHMARKS[name]
+    built = b.build(**b.reduced_params)
+    res = interpreter.run(built.program)
+    rvv.check(built, res.memory)
+
+
+@pytest.mark.parametrize("name", ["dropout", "gemv", "pathfinder"])
+@pytest.mark.parametrize("cap", [3, 5, 8])
+def test_dispersed_execution_is_semantics_preserving(name, cap):
+    b = rvv.BENCHMARKS[name]
+    built = b.build(**b.reduced_params)
+    full = interpreter.run(built.program)
+    disp = interpreter.run_dispersed(built.program, cap, policies.FIFO)
+    np.testing.assert_array_equal(full.memory, disp.memory)
+
+
+def test_fa2_touches_all_registers_reduced_working_set():
+    b = rvv.BENCHMARKS["flashattention2"]
+    built = b.build(**b.paper_params)
+    assert len(built.program.active_vregs()) == 32
+
+
+def test_fa2_close_to_true_softmax_attention():
+    p = dict(seq=32, d=16, bc=16, seed=3)
+    built = flashattention2.build(**p)
+    res = interpreter.run(built.program)
+    got = built.program.buffer_view(res.memory, "O").reshape(32, 16)
+    want = flashattention2.reference_softmax(**p)
+    # loose: the kernel uses the squaring exp approximation
+    assert np.max(np.abs(got - want)) < 0.25
+    assert np.corrcoef(got.ravel(), want.ravel())[0, 1] > 0.99
+
+
+def test_scalar_costs_positive_and_ordered():
+    for name, b in rvv.BENCHMARKS.items():
+        c = b.scalar_cost(**b.paper_params)
+        assert c.cycles() > 0, name

@@ -1,0 +1,43 @@
+"""End-to-end behaviour: the paper's pipeline from kernel source to
+area/power verdict, exercised at reduced scale."""
+
+import numpy as np
+
+from repro import rvv
+from repro.core import costmodel, events, interpreter, planner, simulator
+
+
+def test_end_to_end_dispersion_study():
+    """Build a kernel -> validate numerics -> sweep cVRF sizes -> confirm
+    the paper's qualitative claims at reduced scale."""
+    b = rvv.BENCHMARKS["gemv"]
+    built = b.build(m=32, k=64)
+    res = interpreter.run(built.program)
+    rvv.check(built, res.memory)
+
+    caps = [3, 4, 5, 6, 8]
+    sweep = simulator.SweepConfig.make(caps + [32])
+    out = simulator.simulate_sweep(built.program, sweep)
+    full = out["cycles"][-1]
+    perf = full / out["cycles"][:-1]
+    # performance is monotone in capacity and reaches ~full at 8
+    assert all(perf[i] <= perf[i + 1] + 1e-9 for i in range(len(caps) - 1))
+    assert perf[-1] > 0.97
+
+    plan = planner.min_registers_for_hit_rate(built.program)
+    assert plan.min_capacity <= 8          # the paper's headline
+
+    c8 = simulator.simulate_one(built.program, 8)
+    c32 = simulator.simulate_one(built.program, 32)
+    p8 = costmodel.application_power(c8, 8, c8["cycles"], dispersed=True)
+    p32 = costmodel.application_power(c32, 32, c32["cycles"])
+    assert p8["total"] < p32["total"]      # dispersion saves power
+
+
+def test_policy_headroom_api():
+    b = rvv.BENCHMARKS["pathfinder"]
+    built = b.build(**b.reduced_params)
+    out = planner.policy_headroom(built.program, capacities=(3, 4))
+    assert set(out) == {"fifo", "lru", "lfu", "opt"}
+    for cap in (3, 4):
+        assert out["opt"][cap] >= out["fifo"][cap] - 1e-9

@@ -1,0 +1,132 @@
+"""Unit tests: trace eDSL, event expansion, cycle simulator mechanics."""
+
+import numpy as np
+import pytest
+
+from repro.core import events, isa, policies, simulator
+from repro.core.trace import Assembler, MemoryMap
+
+
+def _prog(body):
+    mm = MemoryMap()
+    a_buf = mm.alloc("a", np.arange(64, dtype=np.float32))
+    a = Assembler("t")
+    body(a, a_buf)
+    return a.finalize(mm)
+
+
+def test_repeat_expansion_strides():
+    def body(a, buf):
+        with a.repeat(4):
+            a.vle(1, buf, stride=32)
+            a.vadd(2, 1, 1)
+            a.vse(2, buf + 128, stride=32)
+    p = _prog(body)
+    assert p.num_instructions == 12
+    vle_addrs = p.addr[p.op == isa.VLE]
+    assert list(vle_addrs) == [0, 32, 64, 96]
+    vse_addrs = p.addr[p.op == isa.VSE]
+    assert list(vse_addrs) == [128, 160, 192, 224]
+
+
+def test_nested_repeat_two_level_strides():
+    def body(a, buf):
+        with a.repeat(3):                       # outer: stride2
+            with a.repeat(2):                   # inner: stride
+                a.vle(1, buf, stride=4, stride2=100)
+                a.vmacc(2, 1, 1)
+    p = _prog(body)
+    addrs = list(p.addr[p.op == isa.VLE])
+    assert addrs == [0, 4, 100, 104, 200, 204]
+
+
+def test_event_expansion_vmacc_three_operands():
+    def body(a, buf):
+        a.vmacc(3, 1, 2)
+    p = _prog(body)
+    ev = events.expand(p)
+    regs = list(ev.reg[ev.kind == events.K_REG])
+    assert regs == [1, 2, 3]
+    # vd of vmacc must be fetched (destination-is-source, paper 3.2.1)
+    assert bool(ev.needs_read[ev.kind == events.K_REG][2])
+    # vs2's event locks vs1; vd's event locks both
+    assert ev.lock_a[1] == 1
+    assert ev.lock_a[2] == 1 and ev.lock_b[2] == 2
+
+
+def test_mask_register_never_in_events():
+    def body(a, buf):
+        a.vmslt(1, 2)          # writes v0
+        a.vmerge(3, 1, 2)      # reads v0 implicitly
+    p = _prog(body)
+    ev = events.expand(p)
+    assert (ev.reg[ev.kind == events.K_REG] != isa.MASK_REG).all()
+    assert isa.MASK_REG in p.active_vregs()
+
+
+def test_full_vrf_never_misses():
+    def body(a, buf):
+        for r in range(1, 31):
+            a.vadd(r, max(r - 1, 1), max(r - 2, 1))
+    p = _prog(body)
+    out = simulator.simulate_one(p, 32)
+    assert out["vrf_misses"] == 0
+    assert out["stall_cycles"] == 0
+
+
+def test_compulsory_misses_only_when_capacity_sufficient():
+    def body(a, buf):
+        with a.repeat(10):
+            a.vle(1, buf)
+            a.vle(2, buf + 32)
+            a.vadd(3, 1, 2)
+            a.vse(3, buf + 64)
+    p = _prog(body)
+    out = simulator.simulate_one(p, 4)
+    assert out["vrf_misses"] == 3          # v1, v2, v3 cold misses
+    assert out["spills"] == 0
+
+
+def test_fifo_thrash_below_working_set():
+    # Working set of 4 regs cycled; capacity 3 + FIFO => every access misses.
+    def body(a, buf):
+        with a.repeat(8):
+            a.vadd(1, 2, 3)
+            a.vadd(2, 3, 4)
+            a.vadd(3, 4, 1)
+            a.vadd(4, 1, 2)
+    p = _prog(body)
+    o3 = simulator.simulate_one(p, 3)
+    o5 = simulator.simulate_one(p, 5)
+    assert o3["hit_rate"] < 0.5
+    assert o5["hit_rate"] > 0.85
+    assert o3["cycles"] > o5["cycles"]
+
+
+def test_dirty_eviction_spills():
+    def body(a, buf):
+        for r in range(1, 8):
+            a.vle(r, buf)                  # writes regs 1..7 (dirty)
+        a.vle(1, buf)
+    p = _prog(body)
+    out = simulator.simulate_one(p, 3)
+    assert out["spills"] > 0
+
+
+def test_operand_locking_prevents_inflight_eviction():
+    # vmacc(3,1,2) with capacity 3: installing vd=3 must not evict vs1/vs2.
+    def body(a, buf):
+        a.vle(1, buf)
+        a.vle(2, buf + 32)
+        a.vmacc(3, 1, 2)
+    p = _prog(body)
+    out = simulator.simulate_one(p, 3)
+    # exactly 3 compulsory misses; no re-fetch of v1/v2 within vmacc
+    assert out["vrf_misses"] == 3
+
+
+def test_scalar_cost_model():
+    c = simulator.ScalarCost(flop_ops=100, int_ops=50, loads=10, stores=5,
+                             unique_lines=2, loop_iters=10)
+    # 100*2 + 50 + 10*1.5 + 5 + 2*5 + 10*3
+    assert c.cycles() == 310
