@@ -18,30 +18,32 @@ from repro.core import simulator
 APPS = ("pathfinder", "gemv", "dropout", "flashattention2")
 
 
-def run(max_events=400_000) -> list[dict]:
+def run(max_events=None, fold=True) -> list[dict]:
     rows = []
-    for name in APPS:
-        ev = common.events_for(name)
-        for mem_lat in (1, 3, 5, 10):
-            for l1_kb in (4, 16):
-                t0 = time.time()
-                m = simulator.MachineParams(
-                    l1_sets=l1_kb * 1024 // 32 // 2, mem_latency=mem_lat)
-                out = simulator.simulate_sweep(
-                    ev, simulator.SweepConfig.make([8, 32]), m,
-                    max_events=max_events)
+    sweep = simulator.SweepConfig.make([8, 32])
+    for mem_lat in (1, 3, 5, 10):
+        for l1_kb in (4, 16):
+            t0 = time.time()
+            m = simulator.MachineParams(
+                l1_sets=l1_kb * 1024 // 32 // 2, mem_latency=mem_lat)
+            out = common.sweep_grid(APPS, sweep, fold=fold,
+                                    max_events=max_events, machine=m)
+            us_each = (time.time() - t0) * 1e6 / len(APPS)
+            for pi, name in enumerate(APPS):
                 rows.append(dict(
                     name=f"{name}_mem{mem_lat}_l1_{l1_kb}k",
-                    us_per_call=round((time.time() - t0) * 1e6, 1),
-                    perf_cvrf8=round(float(out["cycles"][1])
-                                     / float(out["cycles"][0]), 4),
-                    hit_rate=round(float(out["hit_rate"][0]), 4),
+                    us_per_call=round(us_each, 1),
+                    perf_cvrf8=round(float(out["cycles"][pi, 1])
+                                     / float(out["cycles"][pi, 0]), 4),
+                    hit_rate=round(float(out["hit_rate"][pi, 0]), 4),
                 ))
     return rows
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "perf_cvrf8", "hit_rate"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "perf_cvrf8", "hit_rate"])
+    return rows
 
 
 if __name__ == "__main__":

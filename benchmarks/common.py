@@ -1,15 +1,25 @@
-"""Shared benchmark utilities: build cache and CSV emission."""
+"""Shared benchmark utilities: the two-level sweep cache and CSV emission.
+
+Level 1 — *trace preparation* keyed by trace identity ``(name, fold,
+max_events)``: building a benchmark, expanding it to per-instruction event
+matrices and computing its periodic fold plan happens once per process, no
+matter how many suites sweep it.
+
+Level 2 — *compiled executables* keyed by padded shape: the fused engine
+pads every prepared trace to a power-of-two bucket and traces the
+per-program ``spill_line0``, so ``jax.jit``'s cache (one entry per
+(bucket, config-count, machine) signature) is shared across programs and
+suites instead of recompiling per benchmark as the per-event engine did.
+"""
 
 from __future__ import annotations
 
 import time
 
-_BUILT = {}
+from repro.core import simulator
 
-# Event cap for the cycle simulator: the big GEMM/conv traces are periodic,
-# so a multi-million-event prefix gives the same rates; cycle totals are
-# scaled by the prefix ratio (exact for steady-state traces).
-MAX_EVENTS = 1_500_000
+_BUILT = {}
+_PREPARED = {}
 
 
 def built(name):
@@ -21,12 +31,47 @@ def built(name):
     return _BUILT[name]
 
 
-def events_for(name):
-    from repro.core import events
-    key = ("ev", name)
-    if key not in _BUILT:
-        _BUILT[key] = events.expand(built(name).program)
-    return _BUILT[key]
+def prepared_for(name, fold=True, max_events=None) -> simulator.PreparedTrace:
+    """Level-1 cache: expanded (+folded/truncated) trace per benchmark."""
+    if max_events is not None:
+        fold = False                      # truncation is the legacy mode
+    key = (name, fold, max_events)
+    if key not in _PREPARED:
+        _PREPARED[key] = simulator.prepare(
+            built(name).program, fold=fold, max_events=max_events)
+    return _PREPARED[key]
+
+
+# A folded trace whose steadiness check fails is re-simulated in full when
+# the full trace is affordable; bigger traces keep the (flagged) fold.
+REFINE_MAX_ROWS = 400_000
+
+
+def sweep_grid(names, sweep, fold=True, max_events=None, refine=True,
+               machine=simulator.DEFAULT_MACHINE):
+    """One sweep call for a whole suite: P programs x C configs.
+
+    With ``refine`` (default), any program whose fold was not certified
+    exact (``fold_exact`` False) and whose full trace has at most
+    ``REFINE_MAX_ROWS`` instructions is transparently re-simulated without
+    folding, so the suite is exact wherever exactness is affordable and
+    honestly flagged where it is not.
+    """
+    names = list(names)
+    preps = [prepared_for(n, fold=fold, max_events=max_events)
+             for n in names]
+    out = simulator.simulate_grid(preps, sweep, machine)
+    if fold and refine and "fold_exact" in out:
+        for pi, name in enumerate(names):
+            if out["fold_exact"][pi].all():
+                continue
+            if built(name).program.num_instructions > REFINE_MAX_ROWS:
+                continue
+            sub = simulator.simulate_grid([prepared_for(name, fold=False)],
+                                          sweep, machine)
+            for k in out:
+                out[k][pi] = sub[k][0] if k != "fold_exact" else True
+    return out
 
 
 def emit(rows: list[dict], header: list[str]) -> None:

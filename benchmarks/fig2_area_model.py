@@ -33,7 +33,9 @@ def run() -> list[dict]:
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "value", "paper"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "value", "paper"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,5 +1,9 @@
 """Fig 4: (a) performance of cVRF sizes 3..16 normalised to the full VRF and
-(b) cVRF hit rates, for every benchmark application (FIFO, as the paper)."""
+(b) cVRF hit rates, for every benchmark application (FIFO, as the paper).
+
+One sweep-grid call: all applications x all capacities in one engine
+dispatch per shape bucket (folded traces, exact for steady-state kernels).
+"""
 
 from __future__ import annotations
 
@@ -12,28 +16,33 @@ from repro.core import simulator
 CAPS = list(range(3, 17))
 
 
-def run(names=None, max_events=common.MAX_EVENTS) -> list[dict]:
+def run(names=None, max_events=None, fold=True) -> list[dict]:
+    names = list(names or rvv.BENCHMARKS)
+    sweep = simulator.SweepConfig.make(CAPS + [32])
+    t0 = time.time()
+    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
+    us_each = (time.time() - t0) * 1e6 / len(names)
     rows = []
-    for name in names or rvv.BENCHMARKS:
-        t0 = time.time()
-        ev = common.events_for(name)
-        sweep = simulator.SweepConfig.make(CAPS + [32])
-        out = simulator.simulate_sweep(ev, sweep, max_events=max_events)
-        full = float(out["cycles"][-1])
-        for i, cap in enumerate(CAPS):
+    for pi, name in enumerate(names):
+        full = float(out["cycles"][pi, -1])
+        exact = out.get("fold_exact")
+        for ci, cap in enumerate(CAPS):
             rows.append(dict(
-                name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
-                capacity=cap,
-                norm_perf=round(full / float(out["cycles"][i]), 4),
-                hit_rate=round(float(out["hit_rate"][i]), 4),
-                spills=int(out["spills"][i]), fills=int(out["fills"][i]),
+                name=name, us_per_call=round(us_each, 1), capacity=cap,
+                norm_perf=round(full / float(out["cycles"][pi, ci]), 4),
+                hit_rate=round(float(out["hit_rate"][pi, ci]), 4),
+                spills=int(out["spills"][pi, ci]),
+                fills=int(out["fills"][pi, ci]),
+                fold_exact=bool(exact[pi, ci]) if exact is not None else True,
             ))
     return rows
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "capacity", "norm_perf",
-                        "hit_rate", "spills", "fills"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "capacity", "norm_perf",
+                       "hit_rate", "spills", "fills", "fold_exact"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ import time
 
 from benchmarks import common
 from repro import rvv
-from repro.core import planner
+from repro.core import simulator
 
 PAPER_MIN = {  # read off the paper's Fig 5
     "pathfinder": 6, "jacobi2d": 7, "somier": 8, "gemv": 5, "dropout": 3,
@@ -16,26 +16,35 @@ PAPER_MIN = {  # read off the paper's Fig 5
     "flashattention2": 3,
 }
 
+CAPS = list(range(3, 17))
 
-def run(max_events=common.MAX_EVENTS) -> list[dict]:
+
+def run(max_events=None, fold=True, target=0.95) -> list[dict]:
+    names = list(rvv.BENCHMARKS)
+    sweep = simulator.SweepConfig.make(CAPS + [32])
+    t0 = time.time()
+    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
+    us_each = (time.time() - t0) * 1e6 / len(names)
     rows = []
-    for name in rvv.BENCHMARKS:
-        t0 = time.time()
-        built = common.built(name)
-        res = planner.min_registers_for_hit_rate(
-            built.program, target=0.95, max_events=max_events)
+    for pi, name in enumerate(names):
+        hit = {c: float(out["hit_rate"][pi, ci])
+               for ci, c in enumerate(CAPS)}
+        ok = [c for c in CAPS if hit[c] > target]
+        min_regs = min(ok) if ok else max(CAPS) + 1
         rows.append(dict(
-            name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
-            min_regs=res.min_capacity, paper_min=PAPER_MIN.get(name, ""),
-            active_regs=res.active_regs,
-            hit_at_min=round(res.hit_rates.get(res.min_capacity, 0.0), 4),
+            name=name, us_per_call=round(us_each, 1),
+            min_regs=min_regs, paper_min=PAPER_MIN.get(name, ""),
+            active_regs=len(common.built(name).program.active_vregs()),
+            hit_at_min=round(hit.get(min_regs, 0.0), 4),
         ))
     return rows
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "min_regs", "paper_min",
-                        "active_regs", "hit_at_min"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "min_regs", "paper_min",
+                       "active_regs", "hit_at_min"])
+    return rows
 
 
 if __name__ == "__main__":

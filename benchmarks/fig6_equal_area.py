@@ -29,18 +29,19 @@ def narrow_cycles(full: dict) -> float:
     return 4.0 * compute_cycles + (naccess - l1_miss) * 1 + l1_miss * (1 + 5)
 
 
-def run(max_events=common.MAX_EVENTS) -> list[dict]:
+def run(max_events=None, fold=True) -> list[dict]:
+    names = list(rvv.BENCHMARKS)
+    sweep = simulator.SweepConfig.make([8, 32])
+    t0 = time.time()
+    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
+    us_each = (time.time() - t0) * 1e6 / len(names)
     rows = []
-    for name in rvv.BENCHMARKS:
-        t0 = time.time()
-        ev = common.events_for(name)
-        sweep = simulator.SweepConfig.make([8, 32])
-        out = simulator.simulate_sweep(ev, sweep, max_events=max_events)
-        cvrf8 = float(out["cycles"][0])
-        full = float(out["cycles"][1])
-        narrow = narrow_cycles({k: v[1] for k, v in out.items()})
+    for pi, name in enumerate(names):
+        cvrf8 = float(out["cycles"][pi, 0])
+        full = float(out["cycles"][pi, 1])
+        narrow = narrow_cycles({k: v[pi, 1] for k, v in out.items()})
         rows.append(dict(
-            name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
+            name=name, us_per_call=round(us_each, 1),
             dispersion_8x256=round(full / cvrf8, 3),
             narrow_32x64=round(full / narrow, 3),
             advantage=round(narrow / cvrf8, 2),
@@ -49,8 +50,10 @@ def run(max_events=common.MAX_EVENTS) -> list[dict]:
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "dispersion_8x256",
-                        "narrow_32x64", "advantage"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "dispersion_8x256",
+                       "narrow_32x64", "advantage"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -11,14 +11,16 @@ from repro import rvv
 from repro.core import costmodel, simulator
 
 
-def run(max_events=common.MAX_EVENTS) -> list[dict]:
+def run(max_events=None, fold=True) -> list[dict]:
+    names = list(rvv.BENCHMARKS)
+    sweep = simulator.SweepConfig.make([8, 32])
+    t00 = time.time()
+    grid = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
+    us_each = (time.time() - t00) * 1e6 / len(names)
     rows = []
     savings = []
-    for name in rvv.BENCHMARKS:
-        t0 = time.time()
-        ev = common.events_for(name)
-        sweep = simulator.SweepConfig.make([8, 32])
-        out = simulator.simulate_sweep(ev, sweep, max_events=max_events)
+    for pi, name in enumerate(names):
+        out = {k: v[pi] for k, v in grid.items()}
         c8 = {k: float(v[0]) for k, v in out.items()}
         c32 = {k: float(v[1]) for k, v in out.items()}
         p8 = costmodel.application_power(c8, 8, c8["cycles"], dispersed=True)
@@ -26,7 +28,7 @@ def run(max_events=common.MAX_EVENTS) -> list[dict]:
         save = 100 * (1 - p8["total"] / p32["total"])
         savings.append(save)
         rows.append(dict(
-            name=name, us_per_call=round((time.time() - t0) * 1e6, 1),
+            name=name, us_per_call=round(us_each, 1),
             power_full=round(p32["total"], 2),
             power_cvrf8=round(p8["total"], 2),
             saving_pct=round(save, 1),
@@ -39,8 +41,10 @@ def run(max_events=common.MAX_EVENTS) -> list[dict]:
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "power_full", "power_cvrf8",
-                        "saving_pct", "paper_saving"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "power_full", "power_cvrf8",
+                       "saving_pct", "paper_saving"])
+    return rows
 
 
 if __name__ == "__main__":

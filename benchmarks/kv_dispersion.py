@@ -52,8 +52,10 @@ def run() -> list[dict]:
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "hit_rate", "spills",
-                        "hot_kb"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "hit_rate", "spills",
+                       "hot_kb"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -2,48 +2,62 @@
 Belady-OPT hit rates, plus the allocate-no-fetch write optimisation.
 
 OPT upper-bounds any realizable policy; the FIFO->OPT gap quantifies what
-the paper's simplicity choice leaves on the table (§5 of EXPERIMENTS.md)."""
+the paper's simplicity choice leaves on the table (§5 of EXPERIMENTS.md).
+
+The whole study — applications x capacities x policies x no-fetch — is one
+sweep-grid call on folded traces.
+"""
 
 from __future__ import annotations
 
 import time
 
+import numpy as np
+
 from benchmarks import common
-from repro import rvv
 from repro.core import policies, simulator
 
 CAPS = (4, 6, 8)
 APPS = ("pathfinder", "jacobi2d", "gemv", "somier", "conv2d_7x7",
         "flashattention2")
+POLS = (policies.FIFO, policies.LRU, policies.LFU, policies.OPT)
 
 
-def run(max_events=common.MAX_EVENTS) -> list[dict]:
+def run(max_events=None, fold=True) -> list[dict]:
+    # Config axis: every (cap, policy) plus FIFO+allocate-no-fetch per cap.
+    caps, pols, anfs = [], [], []
+    for cap in CAPS:
+        for pol in POLS:
+            caps.append(cap), pols.append(pol), anfs.append(False)
+        caps.append(cap), pols.append(policies.FIFO), anfs.append(True)
+    sweep = simulator.SweepConfig(np.asarray(caps, np.int32),
+                                  np.asarray(pols, np.int32),
+                                  np.asarray(anfs, bool))
+    t0 = time.time()
+    out = common.sweep_grid(APPS, sweep, fold=fold, max_events=max_events)
+    us_each = (time.time() - t0) * 1e6 / len(APPS)
+    n_per_cap = len(POLS) + 1
     rows = []
-    for name in APPS:
-        t0 = time.time()
-        ev = common.events_for(name)
-        for cap in CAPS:
+    for pi, name in enumerate(APPS):
+        for ki, cap in enumerate(CAPS):
+            base = ki * n_per_cap
             row = dict(name=name, capacity=cap,
-                       us_per_call=round((time.time() - t0) * 1e6, 1))
-            for pol in (policies.FIFO, policies.LRU, policies.LFU,
-                        policies.OPT):
-                out = simulator.simulate_one(ev, cap, pol,
-                                             max_events=max_events)
+                       us_per_call=round(us_each, 1))
+            for li, pol in enumerate(POLS):
                 row[policies.POLICY_NAMES[pol]] = round(
-                    float(out["hit_rate"]), 4)
-                if pol == policies.FIFO:
-                    row["fifo_cycles"] = int(out["cycles"])
-            anf = simulator.simulate_one(ev, cap, policies.FIFO, True,
-                                         max_events=max_events)
-            row["fifo_no_fetch_cycles"] = int(anf["cycles"])
+                    float(out["hit_rate"][pi, base + li]), 4)
+            row["fifo_cycles"] = int(out["cycles"][pi, base])
+            row["fifo_no_fetch_cycles"] = int(
+                out["cycles"][pi, base + len(POLS)])
             rows.append(row)
     return rows
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "capacity", "fifo", "lru",
-                        "lfu", "opt", "fifo_cycles",
-                        "fifo_no_fetch_cycles"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "capacity", "fifo", "lru",
+                       "lfu", "opt", "fifo_cycles", "fifo_no_fetch_cycles"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,41 +1,80 @@
 """Benchmark harness: one function per paper table/figure (+ beyond-paper
 studies).  Prints ``name,us_per_call,derived...`` CSV blocks per benchmark.
 
-  python -m benchmarks.run             # everything
-  python -m benchmarks.run table3 fig4 # subset
+  python -m benchmarks.run                       # everything
+  python -m benchmarks.run table3 fig4           # subset
+  python -m benchmarks.run --json BENCH_core.json fig4 table3
+
+``--json PATH`` additionally writes per-suite wall-clock and per-kernel
+cycle counts (the perf trajectory record for this machine).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
-SUITES = ("table3", "fig4", "fig5", "fig6", "fig2", "fig8",
-          "policy_headroom", "vmem_dispersion", "kv_dispersion",
-          "ablation_sensitivity")
+_MODULES = {
+    "table3": "benchmarks.table3_speedup",
+    "fig4": "benchmarks.fig4_cvrf_sweep",
+    "fig5": "benchmarks.fig5_min_regs",
+    "fig6": "benchmarks.fig6_equal_area",
+    "fig2": "benchmarks.fig2_area_model",
+    "fig8": "benchmarks.fig8_power",
+    "policy_headroom": "benchmarks.policy_headroom",
+    "vmem_dispersion": "benchmarks.vmem_dispersion",
+    "kv_dispersion": "benchmarks.kv_dispersion",
+    "ablation_sensitivity": "benchmarks.ablation_sensitivity",
+}
+
+SUITES = tuple(_MODULES)
+
+_CYCLE_KEYS = ("vec_cycles", "scalar_cycles", "fifo_cycles",
+               "fifo_no_fetch_cycles", "cycles")
 
 
 def main(argv=None) -> int:
-    args = (argv if argv is not None else sys.argv[1:]) or list(SUITES)
+    args = list(argv if argv is not None else sys.argv[1:])
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            print("error: --json requires a file path", file=sys.stderr)
+            return 2
+        json_path = args[i + 1]
+        del args[i:i + 2]
+    suites = args or list(SUITES)
+    unknown = [s for s in suites if s not in _MODULES]
+    if unknown:
+        print(f"error: unknown suite(s) {', '.join(unknown)}; "
+              f"choose from: {', '.join(SUITES)}", file=sys.stderr)
+        return 2
+    report = {"suites": {}, "kernels": {}}
     t00 = time.time()
-    for suite in args:
-        mod = {
-            "table3": "benchmarks.table3_speedup",
-            "fig4": "benchmarks.fig4_cvrf_sweep",
-            "fig5": "benchmarks.fig5_min_regs",
-            "fig6": "benchmarks.fig6_equal_area",
-            "fig2": "benchmarks.fig2_area_model",
-            "fig8": "benchmarks.fig8_power",
-            "policy_headroom": "benchmarks.policy_headroom",
-            "vmem_dispersion": "benchmarks.vmem_dispersion",
-            "kv_dispersion": "benchmarks.kv_dispersion",
-            "ablation_sensitivity": "benchmarks.ablation_sensitivity",
-        }[suite]
+    for suite in suites:
+        mod = _MODULES[suite]
         print(f"\n## {suite} ({mod})", flush=True)
         t0 = time.time()
-        __import__(mod, fromlist=["main"]).main()
-        print(f"## {suite} done in {time.time() - t0:.1f}s", flush=True)
-    print(f"\nALL BENCHMARKS DONE in {time.time() - t00:.1f}s")
+        rows = __import__(mod, fromlist=["main"]).main() or []
+        dt = time.time() - t0
+        print(f"## {suite} done in {dt:.1f}s", flush=True)
+        report["suites"][suite] = {"wall_s": round(dt, 2),
+                                   "rows": len(rows)}
+        for r in rows:
+            cyc = {k: r[k] for k in _CYCLE_KEYS if k in r}
+            if cyc and isinstance(r.get("name"), str):
+                kern = report["kernels"].setdefault(r["name"], {})
+                suffix = f"_cap{r['capacity']}" if "capacity" in r else ""
+                for k, v in cyc.items():
+                    kern[f"{suite}{suffix}.{k}"] = v
+    total = time.time() - t00
+    print(f"\nALL BENCHMARKS DONE in {total:.1f}s")
+    if json_path:
+        report["total_wall_s"] = round(total, 2)
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"wrote {json_path}")
     return 0
 
 

@@ -47,8 +47,10 @@ def run() -> list[dict]:
 
 
 def main():
-    common.emit(run(), ["name", "us_per_call", "grouped_gb", "dispersed_gb",
-                        "ideal_gb", "vmem_acc_mb", "max_err"])
+    rows = run()
+    common.emit(rows, ["name", "us_per_call", "grouped_gb", "dispersed_gb",
+                       "ideal_gb", "vmem_acc_mb", "max_err"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -4,19 +4,23 @@ Public API:
   trace.Assembler / trace.MemoryMap / trace.Program   — RVV-lite trace eDSL
   interpreter.run / interpreter.run_dispersed          — functional oracles
   simulator.simulate_sweep / simulate_one              — cycle-level cVRF model
+  simulator.prepare / simulate_grid                    — fused P x C sweep grid
+  folding.plan                                         — exact periodic folding
   policies.FIFO / LRU / LFU / OPT                      — replacement policies
   planner.min_registers_for_hit_rate / policy_headroom — working-set planning
   costmodel.cpu_area / application_power               — analytic 28nm model
 """
 
-from repro.core import (costmodel, events, interpreter, isa, planner,
-                        policies, simulator, trace)
-from repro.core.simulator import (MachineParams, SweepConfig, simulate_one,
+from repro.core import (costmodel, events, folding, interpreter, isa,
+                        planner, policies, simulator, trace)
+from repro.core.simulator import (MachineParams, PreparedTrace, SweepConfig,
+                                  prepare, simulate_grid, simulate_one,
                                   simulate_sweep)
 from repro.core.trace import Assembler, MemoryMap, Program
 
 __all__ = [
-    "costmodel", "events", "interpreter", "isa", "planner", "policies",
-    "simulator", "trace", "MachineParams", "SweepConfig", "simulate_one",
+    "costmodel", "events", "folding", "interpreter", "isa", "planner",
+    "policies", "simulator", "trace", "MachineParams", "PreparedTrace",
+    "SweepConfig", "prepare", "simulate_grid", "simulate_one",
     "simulate_sweep", "Assembler", "MemoryMap", "Program",
 ]

@@ -1,0 +1,200 @@
+"""Exact periodic folding of repeat-generated instruction traces.
+
+``Assembler.repeat`` records ``(start, block_len, count)`` metadata for every
+expanded repeat block (``Program.repeats``).  Hot benchmark loops are
+periodic, so instead of simulating millions of near-identical iterations (or
+lossily truncating the trace, as the old ``MAX_EVENTS`` prefix did), we
+
+  1. keep a *warm-up* prefix of each sufficiently long repeat block — enough
+     iterations to stream ~2x the L1 capacity so the cache reaches its
+     steady state,
+  2. keep two further *measured* super-periods A and B, and
+  3. drop the remaining iterations, giving every instruction of B an integer
+     extrapolation ``weight`` so counters come out as
+     ``total = head + warmup + A + (count - warmup - 1) * B``.
+
+Folding is recursive (blocks nested inside a kept period fold again) and
+multiplicative (a nested B weight multiplies the enclosing one).  The
+simulator accumulates three counter sets — total (weighted), period A and
+period B — and reports ``fold_exact`` when A == B, i.e. the trace really was
+in steady state and the algebraic extrapolation is exact.
+
+A *super-period* groups ``unit`` consecutive iterations (8 by default when
+the count allows) so that sub-cacheline strides (e.g. 4-byte broadcast
+streams, 8 elements per 32-byte line) complete a whole line per measured
+period and the per-period counter deltas are constant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.trace import Program
+
+
+@dataclasses.dataclass
+class FoldPlan:
+    """Row selection + extrapolation weights for a folded trace."""
+
+    rows: np.ndarray      # (T',) int64 kept instruction rows, ascending
+    weight: np.ndarray    # (T',) int32 total-counter weight per row
+    wa: np.ndarray        # (T',) int32 contribution to one measured period A
+    wb: np.ndarray        # (T',) int32 contribution to one measured period B
+    num_folds: int        # repeat blocks actually folded
+    num_rows_full: int    # rows of the unfolded trace
+    certifiable: bool = True   # False: kept rows after a folded block reuse
+    #   the block's dropped lines, so the runtime A == B check cannot see
+    #   the post-loop state divergence and must not certify exactness.
+
+    @property
+    def kept_fraction(self) -> float:
+        return len(self.rows) / max(self.num_rows_full, 1)
+
+
+@dataclasses.dataclass
+class _Node:
+    s: int
+    bl: int
+    cnt: int
+    children: list
+
+    @property
+    def e(self) -> int:
+        return self.s + self.bl * self.cnt
+
+
+def _build_tree(segments) -> list:
+    """Nest (start, block_len, count) segments by containment (they are
+    properly nested or disjoint by construction)."""
+    nodes = [_Node(s, bl, cnt, []) for s, bl, cnt in segments]
+    nodes.sort(key=lambda n: (n.s, -(n.bl * n.cnt)))
+    roots, stack = [], []
+    for nd in nodes:
+        while stack and nd.s >= stack[-1].e:
+            stack.pop()
+        (stack[-1].children if stack else roots).append(nd)
+        stack.append(nd)
+    return roots
+
+
+def plan(program: Program, warm_lines: int = 1024,
+         units: tuple = (8, 4, 2, 1)) -> FoldPlan | None:
+    """Build a fold plan for ``program`` (None when nothing folds).
+
+    ``warm_lines``: cachelines each fold's warm-up must stream before the
+    measured periods (default 2x a 16 KB / 32 B-line L1).
+    """
+    T = program.num_instructions
+    if not program.repeats:
+        return None
+    addr = program.addr
+    roots = _build_tree(program.repeats)
+
+    ranges: list[tuple[int, int, int, int, int]] = []   # (lo, hi, w, wa, wb)
+    state = {"folds": 0}
+    dropped: list[tuple[int, int]] = []     # extrapolated (unkept) regions
+
+    def lines_in(lo, hi) -> int:
+        a = addr[lo:hi]
+        a = a[a >= 0]
+        return len(np.unique(a >> 5)) if a.size else 0
+
+    def new_lines_steady(s, P, reps) -> bool:
+        """True when super-periods 1..k touch a constant number of lines
+        never seen in earlier super-periods (translation-invariant pattern;
+        period 0 owns the first-touch of loop-invariant data)."""
+        seen: set = set()
+        news = []
+        for sp in range(min(8, reps)):
+            a = addr[s + sp * P: s + (sp + 1) * P]
+            cur = set((a[a >= 0] >> 5).tolist())
+            news.append(len(cur - seen))
+            seen |= cur
+        return len(set(news[1:])) <= 1
+
+    def emit_range(lo, hi, children, w, wa, wb, in_fold):
+        cur = lo
+        for ch in children:
+            if ch.s > cur:
+                ranges.append((cur, ch.s, w, wa, wb))
+            emit_node(ch, w, wa, wb, in_fold)
+            cur = ch.e
+        if cur < hi:
+            ranges.append((cur, hi, w, wa, wb))
+
+    def emit_node(nd, w, wa, wb, in_fold):
+        # Pick the unit whose warm-up + 2 measured super-periods keeps the
+        # fewest rows (larger units need fewer warm-up periods when strides
+        # are sub-cacheline, smaller units waste less on coarse strides).
+        # Units whose early super-periods touch a *constant* number of
+        # distinct lines are strongly preferred: a varying count means a
+        # sub-line access pattern longer than the unit (e.g. a 4-byte store
+        # stream crossing a cacheline every few iterations), which the
+        # measured period cannot represent.
+        chosen = None
+        for u in units:
+            if nd.cnt % u:
+                continue
+            reps = nd.cnt // u
+            per_sp = lines_in(nd.s, nd.s + u * nd.bl)
+            warm = max(1, -(-warm_lines // per_sp)) if per_sp else 1
+            if reps >= warm + 3:                    # >=1 extrapolated period
+                steady_u = new_lines_steady(nd.s, u * nd.bl, reps)
+                kept = (warm + 2) * u * nd.bl
+                key = (not steady_u, kept)          # steady units first
+                if chosen is None or key < chosen[3]:
+                    chosen = (u, reps, warm, key)
+        if chosen is None or chosen[3][1] >= 0.95 * (nd.e - nd.s):
+            emit_range(nd.s, nd.e, nd.children, w, wa, wb, in_fold)
+            return
+        u, reps, warm, _ = chosen
+        state["folds"] += 1
+        P = u * nd.bl
+        rest = reps - warm - 2
+        dropped.append((nd.s + (warm + 2) * P, nd.e))
+        for sp in range(warm + 2):
+            lo = nd.s + sp * P
+            hi = lo + P
+            kids = [c for c in nd.children if c.s >= lo and c.e <= hi]
+            if sp < warm:
+                f = (w, wa, wb)
+            elif sp == warm:                        # measured period A
+                f = (w, wa, wb) if in_fold else (w, w, 0)
+            else:                                   # measured period B
+                m = 1 + rest
+                f = (w * m, wa * m, wb * m) if in_fold else (w * m, 0, w)
+            emit_range(lo, hi, kids, *f, in_fold=True)
+
+    emit_range(0, T, roots, 1, 0, 0, False)
+    if not state["folds"]:
+        return None
+    rows = np.concatenate([np.arange(lo, hi, dtype=np.int64)
+                           for lo, hi, *_ in ranges])
+    w = np.concatenate([np.full(hi - lo, wv, np.int32)
+                        for lo, hi, wv, _, _ in ranges])
+    wa = np.concatenate([np.full(hi - lo, av, np.int32)
+                         for lo, hi, _, av, _ in ranges])
+    wb = np.concatenate([np.full(hi - lo, bv, np.int32)
+                         for lo, hi, _, _, bv in ranges])
+    # Post-loop state divergence check: the simulated trace leaves the
+    # caches in period-B-end state, the real trace in last-period state.
+    # If any kept row AFTER a folded block touches a line its dropped
+    # periods touched, the runtime A == B check cannot see the difference,
+    # so the plan must not be certified exact.
+    certifiable = True
+    for d_lo, d_hi in dropped:
+        tail = rows[np.searchsorted(rows, d_hi):]
+        if not tail.size:
+            continue
+        a_t = addr[tail]
+        a_d = addr[d_lo:d_hi]
+        t_lines = np.unique(a_t[a_t >= 0] >> 5)
+        d_lines = np.unique(a_d[a_d >= 0] >> 5)
+        if np.intersect1d(t_lines, d_lines, assume_unique=True).size:
+            certifiable = False
+            break
+    return FoldPlan(rows=rows, weight=w, wa=wa, wb=wb,
+                    num_folds=state["folds"], num_rows_full=T,
+                    certifiable=certifiable)

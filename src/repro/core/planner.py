@@ -12,7 +12,6 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import events as ev_mod
 from repro.core import policies, simulator
 from repro.core.trace import Program
 
@@ -33,36 +32,47 @@ def min_registers_for_hit_rate(
     policy: int = policies.FIFO,
     machine: simulator.MachineParams = simulator.DEFAULT_MACHINE,
     max_events: int | None = None,
+    fold: bool = False,
 ) -> PlanResult:
-    """Smallest capacity whose operand hit rate exceeds ``target``."""
-    ev = ev_mod.expand(program)
+    """Smallest capacity whose operand hit rate exceeds ``target``.
+
+    ``program`` may be a Program, a pre-expanded EventStream, or a
+    PreparedTrace (e.g. the benchmark layer's folded cache entry).
+    """
+    prep = simulator.prepare(program, fold=fold, max_events=max_events)
     caps = list(capacities) + [32]
     sweep = simulator.SweepConfig.make(caps, policy)
-    out = simulator.simulate_sweep(ev, sweep, machine, max_events)
+    out = simulator.simulate_sweep(prep, sweep, machine)
     hit = {c: float(h) for c, h in zip(caps, out["hit_rate"])}
     cyc = {c: int(x) for c, x in zip(caps, out["cycles"])}
     ok = [c for c in capacities if hit[c] > target]
+    active = (len(program.active_vregs())
+              if isinstance(program, Program) else -1)
     return PlanResult(
         min_capacity=min(ok) if ok else max(capacities) + 1,
         hit_rates=hit, cycles=cyc, full_vrf_cycles=cyc[32],
-        active_regs=len(program.active_vregs()),
+        active_regs=active,
     )
 
 
 def policy_headroom(program: Program, capacities=tuple(range(3, 9)),
-                    max_events: int | None = None) -> dict:
+                    max_events: int | None = None,
+                    fold: bool = False) -> dict:
     """Hit-rate comparison FIFO vs LRU vs LFU vs OPT (beyond-paper study).
 
     OPT (Belady) upper-bounds any realizable policy; the gap FIFO->OPT is the
     headroom the paper left on the table by choosing the cheapest policy.
+    One grid call sweeps the full capacities x policies product.
     """
-    ev = ev_mod.expand(program)
+    prep = simulator.prepare(program, fold=fold, max_events=max_events)
+    pols = (policies.FIFO, policies.LRU, policies.LFU, policies.OPT)
+    sweep = simulator.SweepConfig.product(list(capacities), pols)
+    res = simulator.simulate_grid([prep], sweep)
     out = {}
-    for pol in (policies.FIFO, policies.LRU, policies.LFU, policies.OPT):
-        sweep = simulator.SweepConfig.make(list(capacities), pol)
-        res = simulator.simulate_sweep(ev, sweep, max_events=max_events)
+    for li, pol in enumerate(pols):
         out[policies.POLICY_NAMES[pol]] = {
-            int(c): float(h) for c, h in zip(capacities, res["hit_rate"])}
+            int(c): float(res["hit_rate"][0, ci * len(pols) + li])
+            for ci, c in enumerate(capacities)}
     return out
 
 

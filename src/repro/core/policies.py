@@ -6,6 +6,11 @@ offline-optimal (Belady/OPT) as beyond-paper headroom analyses.  The same
 victim-selection functions drive both the cycle simulator (register
 granularity) and the serving-layer dispersed KV cache (page granularity) —
 the mechanism is the paper's, the granularity is the TPU adaptation.
+
+Layout: all per-slot metadata lives in ONE ``(n_slots, 7)`` int32 matrix
+(column constants below), so the fused simulator updates a slot with a
+single 7-wide scatter per operand instead of seven per-field scatters —
+scatter dispatch dominates the scan step on CPU backends.
 """
 
 from __future__ import annotations
@@ -26,39 +31,39 @@ POLICY_NAMES = {FIFO: "fifo", LRU: "lru", LFU: "lfu", OPT: "opt"}
 INT_MAX = 2**31 - 1
 NO_NEXT_USE = 2**31 - 8   # "never used again" sentinel (fits int32)
 
+# Columns of CacheState.meta.
+TAG = 0        # architectural id cached in the slot (-1 = free)
+DIRTY = 1      # modified since fill (0/1)
+INS_SEQ = 2    # insertion order   (FIFO)
+LAST_USE = 3   # last access order (LRU)
+FREQ = 4       # access count      (LFU)
+NEXT_USE = 5   # next future use   (OPT)
+PINNED = 6     # never evict (v0-analogue entries; 0/1)
+NUM_COLS = 7
+
 
 @dataclasses.dataclass
 class CacheState:
-    """Per-slot metadata carried through the simulation scan.
+    """Per-slot metadata carried through the simulation scan."""
 
-    All arrays have shape (n_slots,); ``tags[i] == -1`` means slot i is free.
-    """
-
-    tags: jnp.ndarray        # int32 architectural id cached in each slot
-    dirty: jnp.ndarray       # bool  modified since fill
-    ins_seq: jnp.ndarray     # int32 insertion order   (FIFO)
-    last_use: jnp.ndarray    # int32 last access order (LRU)
-    freq: jnp.ndarray        # int32 access count      (LFU)
-    next_use: jnp.ndarray    # int32 next future use   (OPT)
-    pinned: jnp.ndarray      # bool  never evict (v0-analogue entries)
+    meta: jnp.ndarray        # (n_slots, NUM_COLS) int32
 
     @staticmethod
     def init(n_slots: int) -> "CacheState":
-        z32 = jnp.zeros(n_slots, jnp.int32)
-        return CacheState(
-            tags=jnp.full(n_slots, -1, jnp.int32),
-            dirty=jnp.zeros(n_slots, bool),
-            ins_seq=z32, last_use=z32, freq=z32, next_use=z32,
-            pinned=jnp.zeros(n_slots, bool),
-        )
+        meta = jnp.zeros((n_slots, NUM_COLS), jnp.int32)
+        return CacheState(meta=meta.at[:, TAG].set(-1))
+
+    @property
+    def tags(self) -> jnp.ndarray:
+        return self.meta[:, TAG]
+
+    @property
+    def dirty(self) -> jnp.ndarray:
+        return self.meta[:, DIRTY] == 1
 
 
 jax.tree_util.register_dataclass(
-    CacheState,
-    data_fields=["tags", "dirty", "ins_seq", "last_use", "freq", "next_use",
-                 "pinned"],
-    meta_fields=[],
-)
+    CacheState, data_fields=["meta"], meta_fields=[])
 
 
 def select_victim(state: CacheState, policy, valid_mask,
@@ -70,62 +75,57 @@ def select_victim(state: CacheState, policy, valid_mask,
     ``lock_a``/``lock_b``: tags that must not be evicted (operands of the
     in-flight instruction that were already tag-checked).
     """
-    occ = ((state.tags >= 0) & valid_mask & ~state.pinned
-           & (state.tags != lock_a) & (state.tags != lock_b))
+    m = state.meta
+    tags = m[:, TAG]
+    occ = ((tags >= 0) & valid_mask & (m[:, PINNED] == 0)
+           & (tags != lock_a) & (tags != lock_b))
     inf = jnp.int32(INT_MAX)
-    fifo_m = jnp.where(occ, state.ins_seq, inf)
-    lru_m = jnp.where(occ, state.last_use, inf)
+    fifo_m = jnp.where(occ, m[:, INS_SEQ], inf)
+    lru_m = jnp.where(occ, m[:, LAST_USE], inf)
     # LFU-lite: frequency (capped) with insertion-order tiebreak in low bits.
-    lfu_metric = (jnp.minimum(state.freq, 511) * (2**21)
-                  + (state.ins_seq & (2**21 - 1)))
+    lfu_metric = (jnp.minimum(m[:, FREQ], 511) * (2**21)
+                  + (m[:, INS_SEQ] & (2**21 - 1)))
     lfu_m = jnp.where(occ, lfu_metric, inf)
-    opt_m = jnp.where(occ, -state.next_use, inf)   # farthest next use first
+    opt_m = jnp.where(occ, -m[:, NEXT_USE], inf)   # farthest next use first
     metric = jnp.select(
         [policy == FIFO, policy == LRU, policy == LFU, policy == OPT],
         [fifo_m, lru_m, lfu_m, opt_m], fifo_m)
     return jnp.argmin(metric)
 
 
-def on_access(state: CacheState, slot, *, now, next_use, is_write,
-              policy) -> CacheState:
-    """Metadata update for a hit at ``slot``.
+def apply_access(state: CacheState, *, active, raw_hit, hit_slot,
+                 install_slot, tag, now, seq, next_use, is_write,
+                 pinned=False) -> CacheState:
+    """Fused metadata update for one (possibly masked-off) REG access.
 
-    FIFO deliberately does NOT update recency on hits (paper §3.2.2: the
-    circular-FIFO head is the longest-*resident* entry, not least-recent).
+    Combines the hit update (recency/frequency/next-use; FIFO deliberately
+    does NOT refresh insertion order on hits — paper §3.2.2: the circular
+    FIFO head is the longest-*resident* entry) and the miss install into a
+    single 7-wide scatter at the hit-or-install slot, gated by ``active``.
     """
-    del policy  # all metadata maintained unconditionally; selection picks.
-    return dataclasses.replace(
-        state,
-        dirty=state.dirty.at[slot].set(state.dirty[slot] | is_write),
-        last_use=state.last_use.at[slot].set(now),
-        freq=state.freq.at[slot].add(1),
-        next_use=state.next_use.at[slot].set(next_use),
-    )
-
-
-def on_install(state: CacheState, slot, tag, *, now, seq, next_use,
-               is_write, pinned=False) -> CacheState:
-    """Install ``tag`` into ``slot`` (after any eviction)."""
+    tgt = jnp.where(raw_hit, hit_slot, install_slot)
+    old = state.meta[tgt]
+    w = jnp.int32(is_write)
+    hit_row = jnp.stack([
+        old[TAG], old[DIRTY] | w, old[INS_SEQ], now, old[FREQ] + 1,
+        jnp.int32(next_use), old[PINNED]])
+    ins_row = jnp.stack([
+        jnp.int32(tag), w, jnp.int32(seq), jnp.int32(now), jnp.int32(1),
+        jnp.int32(next_use), jnp.int32(pinned)])
+    new = jnp.where(raw_hit, hit_row, ins_row)
     return CacheState(
-        tags=state.tags.at[slot].set(tag),
-        dirty=state.dirty.at[slot].set(is_write),
-        ins_seq=state.ins_seq.at[slot].set(seq),
-        last_use=state.last_use.at[slot].set(now),
-        freq=state.freq.at[slot].set(1),
-        next_use=state.next_use.at[slot].set(next_use),
-        pinned=state.pinned.at[slot].set(pinned),
-    )
+        meta=state.meta.at[tgt].set(jnp.where(active, new, old)))
 
 
 def lookup(state: CacheState, tag, valid_mask):
     """(hit, slot) for ``tag``; slot is the match or an arbitrary index."""
-    eq = (state.tags == tag) & valid_mask
+    eq = (state.meta[:, TAG] == tag) & valid_mask
     return eq.any(), jnp.argmax(eq)
 
 
 def free_slot(state: CacheState, valid_mask):
     """(has_free, slot) pointing at an unoccupied in-capacity slot."""
-    free = (state.tags < 0) & valid_mask
+    free = (state.meta[:, TAG] < 0) & valid_mask
     return free.any(), jnp.argmax(free)
 
 

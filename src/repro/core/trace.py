@@ -11,6 +11,13 @@ instruction block with per-instruction address strides in vectorised numpy
 (multi-million-instruction traces assemble in milliseconds, matching how a
 compiler emits a strip-mined RVV loop body that reuses the same register
 names every iteration).
+
+Every ``repeat`` additionally records *periodicity metadata* on the finished
+:class:`Program` (``repeats``: one ``(start, block_len, count)`` triple per
+expanded repeat block, including copies replicated by enclosing repeats).
+``core.folding`` uses this to simulate only a warm-up plus two measured
+periods of each hot loop and extrapolate the cycle counters algebraically —
+exact for steady-state traces, replacing lossy prefix truncation.
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ import numpy as np
 from repro.core import isa
 
 _FIELDS = ("op", "vd", "vs1", "vs2", "addr", "imm", "cost_override",
-           "stride", "stride2")
+           "stride", "stride2", "stride3")
 
 
 @dataclasses.dataclass
@@ -40,6 +47,10 @@ class Program:
     memory: np.ndarray        # (M,) float32 initial memory image
     buffers: dict[str, tuple[int, int]]  # name -> (base byte addr, n_f32)
     name: str = "program"
+    # Periodicity metadata: (start_row, block_len, count) per expanded
+    # ``Assembler.repeat`` block (properly nested or disjoint by construction).
+    repeats: list[tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def num_instructions(self) -> int:
@@ -47,7 +58,6 @@ class Program:
 
     def active_vregs(self) -> np.ndarray:
         """Distinct architectural vector registers referenced by the trace."""
-        regs = np.concatenate([self.vd, self.vs1, self.vs2])
         tbl = isa.op_table()
         used = np.concatenate([
             self.vd[tbl["writes_vd"][self.op] | tbl["reads_vd"][self.op]],
@@ -59,7 +69,6 @@ class Program:
         out = np.unique(used)
         if mask_writers.any() or np.isin(self.op, list(isa.MASK_READERS)).any():
             out = np.unique(np.concatenate([out, [isa.MASK_REG]]))
-        del regs
         return out
 
     def vrf_utilization(self) -> float:
@@ -109,10 +118,11 @@ class Assembler:
     def __init__(self, name: str = "program"):
         self.name = name
         self._cols = {f: [] for f in _FIELDS}
+        self._segs: list[tuple[int, int, int]] = []   # (start, block_len, n)
 
     # ---------------------------------------------------------------- emit --
     def _emit(self, op, vd=-1, vs1=-1, vs2=-1, addr=-1, imm=0.0,
-              cost=-1, stride=0, stride2=0):
+              cost=-1, stride=0, stride2=0, stride3=0):
         for r in (vd, vs1, vs2):
             if r != -1 and not (0 <= r < isa.NUM_ARCH_VREGS):
                 raise ValueError(f"bad vreg {r}")
@@ -120,24 +130,26 @@ class Assembler:
         c["op"].append(op); c["vd"].append(vd); c["vs1"].append(vs1)
         c["vs2"].append(vs2); c["addr"].append(addr); c["imm"].append(imm)
         c["cost_override"].append(cost); c["stride"].append(stride)
-        c["stride2"].append(stride2)
+        c["stride2"].append(stride2); c["stride3"].append(stride3)
 
     # Memory ops. ``stride`` advances ``addr`` per iteration of an enclosing
     # ``repeat`` block.
-    def vle(self, vd, addr, stride=0, stride2=0):
-        self._emit(isa.VLE, vd=vd, addr=addr, stride=stride, stride2=stride2)
+    def vle(self, vd, addr, stride=0, stride2=0, stride3=0):
+        self._emit(isa.VLE, vd=vd, addr=addr, stride=stride, stride2=stride2,
+                   stride3=stride3)
 
-    def vse(self, vs, addr, stride=0, stride2=0):
-        self._emit(isa.VSE, vs1=vs, addr=addr, stride=stride, stride2=stride2)
+    def vse(self, vs, addr, stride=0, stride2=0, stride3=0):
+        self._emit(isa.VSE, vs1=vs, addr=addr, stride=stride,
+                   stride2=stride2, stride3=stride3)
 
-    def vbcast(self, vd, addr, stride=0, stride2=0):
+    def vbcast(self, vd, addr, stride=0, stride2=0, stride3=0):
         self._emit(isa.VBCAST, vd=vd, addr=addr, stride=stride,
-                   stride2=stride2)
+                   stride2=stride2, stride3=stride3)
 
-    def vses(self, vs, addr, stride=0, stride2=0):
+    def vses(self, vs, addr, stride=0, stride2=0, stride3=0):
         """Store element 0 of vs as a 4-byte scalar (vfmv.f.s + fsw)."""
         self._emit(isa.VSES, vs1=vs, addr=addr, stride=stride,
-                   stride2=stride2)
+                   stride2=stride2, stride3=stride3)
 
     # Arithmetic.
     def vadd(self, vd, vs1, vs2): self._emit(isa.VADD, vd, vs1, vs2)
@@ -171,10 +183,11 @@ class Assembler:
         """Replicate the enclosed block n times, advancing each memory-op
         address by its ``stride`` per iteration (vectorised expansion).
 
-        Repeats nest one level: after expansion, each instruction's
-        ``stride2`` becomes its ``stride``, so an *enclosing* repeat applies
-        the outer-loop stride (e.g. inner loop over K with stride 4, outer
-        loop over column chunks with stride2 32)."""
+        Repeats nest two levels: after expansion, each instruction's
+        ``stride2`` becomes its ``stride`` and ``stride3`` its ``stride2``,
+        so enclosing repeats apply the outer-loop strides (e.g. inner loop
+        over K with stride 4, column-chunk loop with stride2 32, row loop
+        with stride3 = row pitch)."""
         if n < 1:
             raise ValueError("repeat count must be >= 1")
         start = len(self._cols["op"])
@@ -193,10 +206,18 @@ class Assembler:
         addr[mem] = addr[mem] + np.repeat(reps, k)[mem] * stride[mem]
         tiled["addr"] = addr
         tiled["stride"] = tiled["stride2"].copy()
-        tiled["stride2"] = np.zeros_like(tiled["stride2"])
+        tiled["stride2"] = tiled["stride3"].copy()
+        tiled["stride3"] = np.zeros_like(tiled["stride3"])
         for f in _FIELDS:
             del self._cols[f][start:]
             self._cols[f].extend(tiled[f].tolist())
+        if n >= 2:
+            # Tiling replicates any repeat blocks recorded inside this one;
+            # replicate their metadata too, then record this block itself.
+            inner = [s for s in self._segs if s[0] >= start]
+            for r in range(1, n):
+                self._segs.extend((s0 + r * k, bl, c) for s0, bl, c in inner)
+            self._segs.append((start, k, n))
 
     # ------------------------------------------------------------ finalize --
     def finalize(self, mm: MemoryMap, extra_bytes: int = 0) -> Program:
@@ -212,4 +233,5 @@ class Assembler:
             memory=mm.build(extra_bytes),
             buffers=dict(mm.buffers),
             name=self.name,
+            repeats=sorted(self._segs),
         )

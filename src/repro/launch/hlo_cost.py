@@ -51,6 +51,16 @@ def _nbytes(dt, dims):
     return n * _DTYPE_BYTES.get(dt, 4)
 
 
+def _operand_names(s: str) -> list[str]:
+    """Variable names from an operand list; newer XLA prints typed operands
+    (``dot(f32[256,256]{1,0} %a, ...)``), older ones bare (``dot(%a, %b)``).
+    """
+    names = re.findall(r"%([\w\.\-_]+)", s)
+    if names:
+        return names
+    return [tok.strip().split()[-1] for tok in s.split(",") if tok.strip()]
+
+
 _SKIP_BYTES_OPS = ("get-tuple-element", "tuple(", "parameter(", "constant(",
                    "bitcast(", "after-all(", "partition-id(", "iota(")
 
@@ -82,8 +92,8 @@ def _parse_line(comp: Computation, line: str):
         b = _nbytes(dt, dims)
         om = _OPERANDS.search(rhs)
         if om:
-            for name in om.group(1).split(","):
-                sh = comp.shapes.get(name.strip().lstrip("%"))
+            for name in _operand_names(om.group(1)):
+                sh = comp.shapes.get(name)
                 if sh and sh[1] is not None:
                     b += _nbytes(*sh)
         comp.bytes_accessed += b
@@ -120,7 +130,7 @@ def _parse_line(comp: Computation, line: str):
     elif "__onednn$matmul" in rhs and dims is not None:
         ops = re.search(r"custom-call\(([^)]*)\)", rhs)
         if ops:
-            names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+            names = _operand_names(ops.group(1))
             lhs = comp.shapes.get(names[0]) if names else None
             if lhs and lhs[1]:
                 comp.dot_flops += 2.0 * _nbytes("s8", dims) * lhs[1][-1]
@@ -130,7 +140,7 @@ def _contracting_size(comp: Computation, rhs: str, ops) -> float:
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
     if not (cm and ops):
         return 0.0
-    names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+    names = _operand_names(ops.group(1))
     lhs = comp.shapes.get(names[0]) if names else None
     if not lhs or lhs[1] is None:
         return 0.0

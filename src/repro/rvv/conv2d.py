@@ -39,7 +39,7 @@ def build(n=256, f=7, seed=0) -> common.Built:
     rs = n * 4
     a = Assembler("conv2d")
     a.vbcast(ZR, az)
-    for r in range(0, out_n, 2):
+    with a.repeat(out_n // 2):                   # row-pair loop: 2*rs pitch
         with a.repeat(chunks):
             a.vmv(ACC0, ZR)
             a.vmv(ACC1, ZR)
@@ -47,12 +47,14 @@ def build(n=256, f=7, seed=0) -> common.Built:
                 for fc in range(f):
                     a.vbcast(W[fc], aw + (fr * f + fc) * 4)
                 for fc in range(f):
-                    a.vle(IN0, ai + (r + fr) * rs + fc * 4, stride=32)
+                    a.vle(IN0, ai + fr * rs + fc * 4, stride=32,
+                          stride2=2 * rs)
                     a.vmacc(ACC0, IN0, W[fc])
-                    a.vle(IN1, ai + (r + 1 + fr) * rs + fc * 4, stride=32)
+                    a.vle(IN1, ai + (1 + fr) * rs + fc * 4, stride=32,
+                          stride2=2 * rs)
                     a.vmacc(ACC1, IN1, W[fc])
-            a.vse(ACC0, ao + r * rs, stride=32)
-            a.vse(ACC1, ao + (r + 1) * rs, stride=32)
+            a.vse(ACC0, ao, stride=32, stride2=2 * rs)
+            a.vse(ACC1, ao + rs, stride=32, stride2=2 * rs)
             a.scalar(4)
         a.scalar(4)
     prog = a.finalize(mm)

@@ -60,8 +60,13 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
     a = Assembler("flashattention2")
     dc = d // VL                               # output chunks per row
     n_blocks = (seq + bc - 1) // bc
+    # The register rotation has period 10, so 10 consecutive query rows form
+    # one periodic block: emit them inside a repeat (with the per-group Q/O
+    # advance as the outermost stride) so the trace carries fold metadata.
+    group = 10 if seq % 10 == 0 else 1
+    grp_adv = group * d * 4 if group > 1 else 0
 
-    for i in range(seq):
+    def emit_row(i):
         # ---- row init: acc = 0, m = -inf, l = 0 (memory-resident state)
         a.vbcast(31, az)
         with a.repeat(dc):
@@ -81,7 +86,7 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
             with a.repeat(bchunks):
                 a.vbcast(r0, az)
                 with a.repeat(d):
-                    a.vbcast(r1, aq + i * d * 4, stride=4)
+                    a.vbcast(r1, aq + i * d * 4, stride=4, stride3=grp_adv)
                     a.vle(r2, akt + j0 * 4, stride=seq * 4, stride2=32)
                     a.vmacc(r0, r1, r2)
                 a.vmul_sc(r0, r0, scale)
@@ -146,8 +151,16 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
         with a.repeat(dc):
             a.vle(o0, aacc, stride=32)
             a.vdiv(o0, o0, o1)
-            a.vse(o0, ao + i * d * 4, stride=32)
+            a.vse(o0, ao + i * d * 4, stride=32, stride2=grp_adv)
         a.scalar(3)
+
+    if group > 1:
+        with a.repeat(seq // group):
+            for i0 in range(group):
+                emit_row(i0)
+    else:
+        for i in range(seq):
+            emit_row(i)
     prog = a.finalize(mm)
 
     # ---------------- f64 mirror (same blocking + same exp approx) --------

@@ -39,14 +39,14 @@ def build(m=32, k=1152, n=64, seed=0) -> common.Built:
     a = Assembler("gemm")
     a.vbcast(ZR, az)
     chunks = n // isa.VL_ELEMS
-    for i in range(m):
+    with a.repeat(m):                    # row loop: stride3 = per-row pitch
         with a.repeat(chunks):
             a.vmv(ACC, ZR)
             with a.repeat(k):
-                a.vbcast(AR, aa + i * k * 4, stride=4, stride2=0)
-                a.vle(BR, ab, stride=n * 4, stride2=32)
+                a.vbcast(AR, aa, stride=4, stride2=0, stride3=k * 4)
+                a.vle(BR, ab, stride=n * 4, stride2=32, stride3=0)
                 a.vmacc(ACC, AR, BR)
-            a.vse(ACC, ac + i * n * 4, stride=32)
+            a.vse(ACC, ac, stride=32, stride2=n * 4)
             a.scalar(3)
         a.scalar(3)
     prog = a.finalize(mm)

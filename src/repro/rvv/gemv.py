@@ -29,20 +29,20 @@ def build(m=512, k=512, seed=0) -> common.Built:
 
     a = Assembler("gemv")
     a.vbcast(Z, az)
-    for i in range(0, m, 2):
+    with a.repeat(m // 2):               # row-pair loop
         a.vmv(4, Z)                  # acc0 = 0
         a.vmv(5, Z)                  # acc1 = 0
         with a.repeat(k // isa.VL_ELEMS):
-            a.vle(1, ax, stride=32)
-            a.vle(2, aA + i * k * 4, stride=32)
+            a.vle(1, ax, stride=32, stride2=0)
+            a.vle(2, aA, stride=32, stride2=2 * k * 4)
             a.vmacc(4, 1, 2)
-            a.vle(3, aA + (i + 1) * k * 4, stride=32)
+            a.vle(3, aA + k * 4, stride=32, stride2=2 * k * 4)
             a.vmacc(5, 1, 3)
             a.scalar(3)
         a.vredsum(6, Z, 4)
-        a.vses(6, ay + i * 4)
+        a.vses(6, ay, stride=8)
         a.vredsum(6, Z, 5)
-        a.vses(6, ay + (i + 1) * 4)
+        a.vses(6, ay + 4, stride=8)
         a.scalar(4)
     prog = a.finalize(mm)
     y = (A.astype(np.float64) @ x.astype(np.float64)).astype(np.float32)

@@ -36,20 +36,20 @@ def build(n=128, steps=10, seed=0) -> common.Built:
     for s in range(steps):
         src = (a0, a1)[s % 2]
         dst = (a0, a1)[(s + 1) % 2]
-        for i in range(1, n + 1):
-            r = src + i * rs
+        with a.repeat(n):                            # grid rows: stride2 = rs
+            r = src + rs                             # first interior row
             with a.repeat(chunks):
-                a.vle(1, r - rs + 4, stride=32)     # up
-                a.vle(2, r + rs + 4, stride=32)     # down
-                a.vle(3, r + 0, stride=32)          # left   (aligned)
-                a.vle(4, r + 8, stride=32)          # right
-                a.vle(5, r + 4, stride=32)          # center
+                a.vle(1, r - rs + 4, stride=32, stride2=rs)     # up
+                a.vle(2, r + rs + 4, stride=32, stride2=rs)     # down
+                a.vle(3, r + 0, stride=32, stride2=rs)          # left
+                a.vle(4, r + 8, stride=32, stride2=rs)          # right
+                a.vle(5, r + 4, stride=32, stride2=rs)          # center
                 a.vadd(6, 1, 2)
                 a.vadd(6, 6, 3)
                 a.vadd(6, 6, 4)
                 a.vadd(6, 6, 5)
                 a.vmul_sc(6, 6, 0.2)
-                a.vse(6, dst + i * rs + 4, stride=32)
+                a.vse(6, dst + rs + 4, stride=32, stride2=rs)
                 a.scalar(3)
             a.scalar(4)
     prog = a.finalize(mm)

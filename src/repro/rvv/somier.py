@@ -71,20 +71,23 @@ def build(n=32, steps=2, seed=0) -> common.Built:
     a = Assembler("somier")
     a.vbcast(ZR, az)
     a.vbcast(DTR, adt)
+    off = xs + ys + 4                 # (i=1, j=1, k=1) start (unaligned)
     for _ in range(steps):
         # ---------------- force pass ----------------
-        for i in range(1, n + 1):
-            for j in range(1, n + 1):
-                off = i * xs + j * ys + 4          # k=1 start (unaligned)
+        with a.repeat(n):                          # i rows:    stride3 = xs
+            with a.repeat(n):                      # j columns: stride2 = ys
                 with a.repeat(chunks):
                     a.vmv(FX, ZR); a.vmv(FY, ZR); a.vmv(FZ, ZR)
-                    a.vle(CX, ap[0] + off, stride=32)
-                    a.vle(CY, ap[1] + off, stride=32)
-                    a.vle(CZ, ap[2] + off, stride=32)
+                    a.vle(CX, ap[0] + off, stride=32, stride2=ys, stride3=xs)
+                    a.vle(CY, ap[1] + off, stride=32, stride2=ys, stride3=xs)
+                    a.vle(CZ, ap[2] + off, stride=32, stride2=ys, stride3=xs)
                     for d in nbr_off:
-                        a.vle(NX, ap[0] + off + d, stride=32)
-                        a.vle(NY, ap[1] + off + d, stride=32)
-                        a.vle(NZ, ap[2] + off + d, stride=32)
+                        a.vle(NX, ap[0] + off + d, stride=32, stride2=ys,
+                              stride3=xs)
+                        a.vle(NY, ap[1] + off + d, stride=32, stride2=ys,
+                              stride3=xs)
+                        a.vle(NZ, ap[2] + off + d, stride=32, stride2=ys,
+                              stride3=xs)
                         a.vsub(DX, NX, CX)
                         a.vsub(DY, NY, CY)
                         a.vsub(DZ, NZ, CZ)
@@ -98,24 +101,28 @@ def build(n=32, steps=2, seed=0) -> common.Built:
                         a.vmacc(FX, T2, DX)
                         a.vmacc(FY, T2, DY)
                         a.vmacc(FZ, T2, DZ)
-                    a.vse(FX, af[0] + off, stride=32)
-                    a.vse(FY, af[1] + off, stride=32)
-                    a.vse(FZ, af[2] + off, stride=32)
+                    a.vse(FX, af[0] + off, stride=32, stride2=ys, stride3=xs)
+                    a.vse(FY, af[1] + off, stride=32, stride2=ys, stride3=xs)
+                    a.vse(FZ, af[2] + off, stride=32, stride2=ys, stride3=xs)
                     a.scalar(4)
                 a.scalar(3)
         # ---------------- integrate pass ----------------
-        for i in range(1, n + 1):
-            for j in range(1, n + 1):
-                off = i * xs + j * ys + 4
+        with a.repeat(n):
+            with a.repeat(n):
                 with a.repeat(chunks):
                     for c in range(3):
-                        a.vle(1, af[c] + off, stride=32)     # F
-                        a.vle(2, av[c] + off, stride=32)     # v
+                        a.vle(1, af[c] + off, stride=32, stride2=ys,
+                              stride3=xs)                    # F
+                        a.vle(2, av[c] + off, stride=32, stride2=ys,
+                              stride3=xs)                    # v
                         a.vmacc(2, DTR, 1)                   # v += dt*F
-                        a.vse(2, av[c] + off, stride=32)
-                        a.vle(3, ap[c] + off, stride=32)     # p
+                        a.vse(2, av[c] + off, stride=32, stride2=ys,
+                              stride3=xs)
+                        a.vle(3, ap[c] + off, stride=32, stride2=ys,
+                              stride3=xs)                    # p
                         a.vmacc(3, DTR, 2)                   # p += dt*v
-                        a.vse(3, ap[c] + off, stride=32)
+                        a.vse(3, ap[c] + off, stride=32, stride2=ys,
+                              stride3=xs)
                     a.scalar(4)
                 a.scalar(3)
     prog = a.finalize(mm)

@@ -14,7 +14,9 @@ import pytest
     ("benchmarks.fig8_power", {"max_events": 30_000}),
     ("benchmarks.vmem_dispersion", {}),
     ("benchmarks.kv_dispersion", {}),
-    ("benchmarks.ablation_sensitivity", {"max_events": 20_000}),
+    # 8 machine configs = 8 engine builds; the heaviest harness case.
+    pytest.param("benchmarks.ablation_sensitivity", {"max_events": 20_000},
+                 marks=pytest.mark.slow),
 ])
 def test_suite_produces_rows(mod, kw):
     m = __import__(mod, fromlist=["run"])

@@ -1,0 +1,88 @@
+"""Periodic folding: exactness on steady-state traces, honesty elsewhere.
+
+``fold=True`` simulates warm-up + two measured periods of each repeat block
+and extrapolates counters algebraically.  For steady-state kernels the
+result is *bit-identical* to simulating the whole trace; the engine's
+``fold_exact`` flag (measured period A == measured period B) must certify
+exactly that.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import folding, isa, simulator
+from repro.core.trace import Assembler, MemoryMap
+from repro.rvv import dropout, gemv
+
+
+def _stream_program(iters=2048):
+    """Unit-stride streaming loop (steady after the L1 warm-up)."""
+    mm = MemoryMap()
+    src = mm.alloc("src", iters * isa.VL_ELEMS)
+    dst = mm.alloc("dst", iters * isa.VL_ELEMS)
+    a = Assembler("stream")
+    with a.repeat(iters):
+        a.vle(1, src, stride=32)
+        a.vmul_sc(2, 1, 3.0)
+        a.vse(2, dst, stride=32)
+        a.scalar(2)
+    return a.finalize(mm)
+
+
+def _assert_fold_exact(program, caps=(3, 8, 32)):
+    sweep = simulator.SweepConfig.make(list(caps))
+    full = simulator.simulate_sweep(program, sweep)
+    fold = simulator.simulate_sweep(program, sweep, fold=True)
+    assert fold["fold_exact"].all()
+    for k in simulator.COUNTER_NAMES:
+        np.testing.assert_array_equal(full[k], fold[k], err_msg=k)
+
+
+def test_fold_plan_shrinks_streaming_trace():
+    p = _stream_program()
+    plan = folding.plan(p)
+    assert plan is not None and plan.num_folds == 1
+    assert len(plan.rows) < 0.4 * p.num_instructions
+
+
+def test_fold_exact_streaming():
+    _assert_fold_exact(_stream_program())
+
+
+def test_fold_exact_dropout():
+    # Steady-state kernel #1 (paper size): exact at every capacity.
+    p = dropout.build(**dropout.PAPER).program
+    _assert_fold_exact(p)
+
+
+@pytest.mark.slow
+def test_fold_exact_gemv_paper():
+    # Steady-state kernel #2 (paper size): exact at every capacity.
+    p = gemv.build(**gemv.PAPER).program
+    _assert_fold_exact(p)
+
+
+def test_fold_flag_honest_on_non_steady_trace():
+    """A loop whose second half touches different data is not steady: the
+    fold must either not trigger or flag itself as inexact."""
+    mm = MemoryMap()
+    buf = mm.alloc("buf", 4096)
+    a = Assembler("phase_change")
+    with a.repeat(64):
+        a.vle(1, buf, stride=32)
+        a.vse(1, buf + 8192, stride=96)
+    p = a.finalize(mm)
+    sweep = simulator.SweepConfig.make([4])
+    fold = simulator.simulate_sweep(p, sweep, fold=True)
+    full = simulator.simulate_sweep(p, sweep)
+    if "fold_exact" in fold and fold["fold_exact"].all():
+        for k in simulator.COUNTER_NAMES:
+            np.testing.assert_array_equal(full[k], fold[k], err_msg=k)
+
+
+def test_fold_weight_algebra():
+    """Total weights must cover every dropped iteration exactly once."""
+    p = _stream_program()
+    plan = folding.plan(p)
+    assert int(plan.weight.sum()) == p.num_instructions
+    assert int(plan.wa.sum()) == int(plan.wb.sum()) > 0

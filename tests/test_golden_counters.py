@@ -1,0 +1,69 @@
+"""Golden counter regression: pins ``simulate_one`` counters for a small
+GEMM and FlashAttention-2 trace at capacities {3, 8, 32} x {FIFO, LRU}.
+
+The values were captured from the original per-event scan engine; the fused
+instruction-level engine must reproduce them bit-for-bit (the engine
+refactor is behaviour-preserving on unfolded traces).
+"""
+
+import pytest
+
+from repro import rvv
+from repro.core import policies, simulator
+
+# (kernel, capacity, policy) -> counters from the per-event seed engine.
+GOLDEN = {
+    ("densenet121_l105", 3, policies.FIFO): dict(
+        cycles=885, stall_cycles=74, spills=22, fills=32, l1_hits=266,
+        l1_misses=53, vrf_hits=633, vrf_misses=32),
+    ("densenet121_l105", 3, policies.LRU): dict(
+        cycles=871, stall_cycles=60, spills=15, fills=25, l1_hits=252,
+        l1_misses=53, vrf_hits=640, vrf_misses=25),
+    ("densenet121_l105", 8, policies.FIFO): dict(
+        cycles=835, stall_cycles=24, spills=0, fills=4, l1_hits=216,
+        l1_misses=53, vrf_hits=661, vrf_misses=4),
+    ("densenet121_l105", 8, policies.LRU): dict(
+        cycles=835, stall_cycles=24, spills=0, fills=4, l1_hits=216,
+        l1_misses=53, vrf_hits=661, vrf_misses=4),
+    ("densenet121_l105", 32, policies.FIFO): dict(
+        cycles=811, stall_cycles=0, spills=0, fills=0, l1_hits=216,
+        l1_misses=49, vrf_hits=665, vrf_misses=0),
+    ("densenet121_l105", 32, policies.LRU): dict(
+        cycles=811, stall_cycles=0, spills=0, fills=0, l1_hits=216,
+        l1_misses=49, vrf_hits=665, vrf_misses=0),
+    ("flashattention2", 3, policies.FIFO): dict(
+        cycles=9933, stall_cycles=1398, spills=540, fills=703, l1_hits=4769,
+        l1_misses=170, vrf_hits=8529, vrf_misses=703),
+    ("flashattention2", 3, policies.LRU): dict(
+        cycles=9871, stall_cycles=1336, spills=541, fills=640, l1_hits=4707,
+        l1_misses=170, vrf_hits=8592, vrf_misses=640),
+    ("flashattention2", 8, policies.FIFO): dict(
+        cycles=9694, stall_cycles=1159, spills=498, fills=506, l1_hits=4530,
+        l1_misses=170, vrf_hits=8726, vrf_misses=506),
+    ("flashattention2", 8, policies.LRU): dict(
+        cycles=9698, stall_cycles=1163, spills=500, fills=508, l1_hits=4534,
+        l1_misses=170, vrf_hits=8724, vrf_misses=508),
+    ("flashattention2", 32, policies.FIFO): dict(
+        cycles=8535, stall_cycles=0, spills=0, fills=0, l1_hits=3557,
+        l1_misses=139, vrf_hits=9232, vrf_misses=0),
+    ("flashattention2", 32, policies.LRU): dict(
+        cycles=8535, stall_cycles=0, spills=0, fills=0, l1_hits=3557,
+        l1_misses=139, vrf_hits=9232, vrf_misses=0),
+}
+
+_PROGRAMS = {}
+
+
+def _program(name):
+    if name not in _PROGRAMS:
+        b = rvv.BENCHMARKS[name]
+        _PROGRAMS[name] = b.build(**b.reduced_params).program
+    return _PROGRAMS[name]
+
+
+@pytest.mark.parametrize("name,cap,policy", sorted(GOLDEN))
+def test_golden_counters(name, cap, policy):
+    out = simulator.simulate_one(_program(name), cap, policy)
+    want = GOLDEN[(name, cap, policy)]
+    got = {k: int(out[k]) for k in want}
+    assert got == want

@@ -22,7 +22,9 @@ def test_xla_cost_analysis_undercounts_loops():
     c1 = _scan_matmul(1).cost_analysis()
     c10 = _scan_matmul(10).cost_analysis()
     d = lambda c: (c[0] if isinstance(c, (list, tuple)) else c)["flops"]
-    assert d(c10) == d(c1)          # the undercount we must correct
+    # XLA reports ~1-trip flops for a 10-trip loop (modulo a few counter
+    # flops, which vary by jax version) — the undercount we must correct.
+    assert d(c10) < 2 * d(c1)
 
 
 def test_analyzer_multiplies_trip_counts():

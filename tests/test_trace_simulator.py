@@ -45,13 +45,12 @@ def test_event_expansion_vmacc_three_operands():
         a.vmacc(3, 1, 2)
     p = _prog(body)
     ev = events.expand(p)
-    regs = list(ev.reg[ev.kind == events.K_REG])
+    regs = list(ev.reg[ev.reg_valid])      # REG lanes in vs1, vs2, vd order
     assert regs == [1, 2, 3]
     # vd of vmacc must be fetched (destination-is-source, paper 3.2.1)
-    assert bool(ev.needs_read[ev.kind == events.K_REG][2])
-    # vs2's event locks vs1; vd's event locks both
-    assert ev.lock_a[1] == 1
-    assert ev.lock_a[2] == 1 and ev.lock_b[2] == 2
+    assert bool(ev.vd_reads[0])
+    # vs2's tag check locks vs1; vd's locks both (serial check, §3.2.1)
+    assert ev.lock_vs1[0] == 1 and ev.lock_vs2[0] == 2
 
 
 def test_mask_register_never_in_events():
@@ -60,8 +59,33 @@ def test_mask_register_never_in_events():
         a.vmerge(3, 1, 2)      # reads v0 implicitly
     p = _prog(body)
     ev = events.expand(p)
-    assert (ev.reg[ev.kind == events.K_REG] != isa.MASK_REG).all()
+    assert (ev.reg[ev.reg_valid] != isa.MASK_REG).all()
     assert isa.MASK_REG in p.active_vregs()
+
+
+def test_next_use_vectorised_matches_naive():
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        T = int(rng.integers(1, 200))
+        reg = rng.integers(0, 12, size=(T, 3)).astype(np.int8)
+        valid = rng.random((T, 3)) < 0.7
+        fast = events._next_use(reg, valid)
+        slow = events._next_use_naive(reg, valid)
+        np.testing.assert_array_equal(fast, slow)
+
+
+def test_repeat_records_periodicity_metadata():
+    def body(a, buf):
+        with a.repeat(3):                   # outer
+            with a.repeat(4):               # inner, replicated 3x
+                a.vadd(1, 2, 3)
+            a.vadd(2, 1, 1)
+    p = _prog(body)
+    # inner block (len 1, count 4) recorded at each outer replica + outer.
+    assert (0, 5, 3) in p.repeats
+    inner = [s for s in p.repeats if s[2] == 4]
+    assert [s[0] for s in inner] == [0, 5, 10]
+    assert all(s[1] == 1 for s in inner)
 
 
 def test_full_vrf_never_misses():
