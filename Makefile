@@ -1,0 +1,18 @@
+# Developer entry points.  The tier-1 gate is `make test-fast` (the pytest
+# default: everything not marked `slow`, kept under ~3 minutes including the
+# differential conformance matrix); `make test` adds the paper-size sweeps
+# and the exhaustive (program, capacity, machine) grids.
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
+
+.PHONY: test-fast test bench
+
+test-fast:
+	$(PYTEST) -x -q
+
+test:
+	$(PYTEST) -x -q -m ""
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_core.json

@@ -5,37 +5,57 @@ performance (normalised to the full VRF under the SAME machine).
 
 If dispersion relied on a fast memory system, slow memories would break it;
 the result shows the conclusion is latency-robust because spill/fill
-traffic is tiny and L1-resident."""
+traffic is tiny and L1-resident.
+
+Machine grid shape: the memory latencies are *traced* machine axes
+(``simulator.MachineSweep``), so each L1 geometry's whole latency grid is
+ONE ``sweep_grid`` call — the machine axis rides inside the vmapped grid
+(one XLA dispatch per program on CPU, ``batch_programs=True`` for literally
+one; either way ONE compile per program-shape bucket, where the old static
+``MachineParams`` recompiled per latency point).  The per-point affine
+cross-check (``costmodel.check_machine_affine``) certifies the traced grid
+against the analytic machine model on every run.
+"""
 
 from __future__ import annotations
 
 import time
 
 from benchmarks import common
-from repro import rvv
-from repro.core import simulator
+from repro.core import costmodel, simulator
 
 APPS = ("pathfinder", "gemv", "dropout", "flashattention2")
+MEM_LATENCIES = (1, 3, 5, 10)
+L1_KBYTES = (4, 16)
 
 
-def run(max_events=None, fold=True) -> list[dict]:
+def machine_grid(l1_kb: int) -> simulator.MachineSweep:
+    """The traced latency axis for one (static) L1 capacity."""
+    return simulator.MachineSweep.make(
+        MEM_LATENCIES, l1_sets=l1_kb * 1024 // 32 // 2)
+
+
+def run(max_events=None, fold=True, check_affine=True) -> list[dict]:
     rows = []
     sweep = simulator.SweepConfig.make([8, 32])
-    for mem_lat in (1, 3, 5, 10):
-        for l1_kb in (4, 16):
-            t0 = time.time()
-            m = simulator.MachineParams(
-                l1_sets=l1_kb * 1024 // 32 // 2, mem_latency=mem_lat)
-            out = common.sweep_grid(APPS, sweep, fold=fold,
-                                    max_events=max_events, machine=m)
-            us_each = (time.time() - t0) * 1e6 / len(APPS)
+    for l1_kb in L1_KBYTES:
+        machines = machine_grid(l1_kb)
+        t0 = time.time()
+        out = common.sweep_grid(APPS, sweep, fold=fold,
+                                max_events=max_events, machine=machines)
+        us_each = (time.time() - t0) * 1e6 / (len(APPS) * len(machines))
+        if check_affine:
+            costmodel.check_machine_affine(out, machines)
+        for mi, mem_lat in enumerate(MEM_LATENCIES):
             for pi, name in enumerate(APPS):
                 rows.append(dict(
                     name=f"{name}_mem{mem_lat}_l1_{l1_kb}k",
+                    kernel=name, mem_latency=mem_lat, l1_kb=l1_kb,
                     us_per_call=round(us_each, 1),
-                    perf_cvrf8=round(float(out["cycles"][pi, 1])
-                                     / float(out["cycles"][pi, 0]), 4),
-                    hit_rate=round(float(out["hit_rate"][pi, 0]), 4),
+                    cycles=int(out["cycles"][pi, 0, mi]),
+                    perf_cvrf8=round(float(out["cycles"][pi, 1, mi])
+                                     / float(out["cycles"][pi, 0, mi]), 4),
+                    hit_rate=round(float(out["hit_rate"][pi, 0, mi]), 4),
                 ))
     return rows
 

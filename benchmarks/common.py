@@ -1,22 +1,27 @@
 """Shared benchmark utilities: the two-level sweep cache and CSV emission.
 
 Level 1 — *trace preparation* keyed by trace identity ``(name, fold,
-max_events)``: building a benchmark, expanding it to per-instruction event
-matrices and computing its periodic fold plan happens once per process, no
-matter how many suites sweep it.
+max_events, warm_lines)``: building a benchmark, expanding it to
+per-instruction event matrices and computing its periodic fold plan happens
+once per process, no matter how many suites sweep it.  ``warm_lines`` (the
+fold warm-up, a function of the static L1 geometry only) is part of the key
+because suites sweeping different L1 sizes fold differently; the traced
+latency axes never are.
 
 Level 2 — *compiled executables* keyed by padded shape: the fused engine
 pads every prepared trace to a power-of-two bucket and traces the
-per-program ``spill_line0``, so ``jax.jit``'s cache (one entry per
-(bucket, config-count, machine) signature) is shared across programs and
-suites instead of recompiling per benchmark as the per-event engine did.
+per-program ``spill_line0`` plus the whole (capacity, policy, machine)
+config grid, so ``jax.jit``'s cache (one entry per (bucket, grid-size,
+L1-geometry) signature) is shared across programs, suites and machine
+points instead of recompiling per benchmark — or per machine — as the
+per-event engine did.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import simulator
+from repro.core import folding, simulator
 
 _BUILT = {}
 _PREPARED = {}
@@ -31,14 +36,17 @@ def built(name):
     return _BUILT[name]
 
 
-def prepared_for(name, fold=True, max_events=None) -> simulator.PreparedTrace:
+def prepared_for(name, fold=True, max_events=None,
+                 machine=simulator.DEFAULT_MACHINE) -> simulator.PreparedTrace:
     """Level-1 cache: expanded (+folded/truncated) trace per benchmark."""
     if max_events is not None:
         fold = False                      # truncation is the legacy mode
-    key = (name, fold, max_events)
+    warm = folding.warm_lines_for(machine.l1_sets, machine.l1_ways)
+    key = (name, fold, max_events, warm)
     if key not in _PREPARED:
         _PREPARED[key] = simulator.prepare(
-            built(name).program, fold=fold, max_events=max_events)
+            built(name).program, fold=fold, max_events=max_events,
+            warm_lines=warm)
     return _PREPARED[key]
 
 
@@ -49,16 +57,19 @@ REFINE_MAX_ROWS = 400_000
 
 def sweep_grid(names, sweep, fold=True, max_events=None, refine=True,
                machine=simulator.DEFAULT_MACHINE):
-    """One sweep call for a whole suite: P programs x C configs.
+    """One sweep call for a whole suite: P programs x C configs — and, when
+    ``machine`` is a :class:`simulator.MachineSweep`, x M machine points in
+    the same dispatch (counter arrays gain a trailing machine axis).
 
     With ``refine`` (default), any program whose fold was not certified
-    exact (``fold_exact`` False) and whose full trace has at most
-    ``REFINE_MAX_ROWS`` instructions is transparently re-simulated without
-    folding, so the suite is exact wherever exactness is affordable and
-    honestly flagged where it is not.
+    exact (``fold_exact`` False, at any grid point) and whose full trace
+    has at most ``REFINE_MAX_ROWS`` instructions is transparently
+    re-simulated without folding, so the suite is exact wherever exactness
+    is affordable and honestly flagged where it is not.
     """
     names = list(names)
-    preps = [prepared_for(n, fold=fold, max_events=max_events)
+    preps = [prepared_for(n, fold=fold, max_events=max_events,
+                          machine=machine)
              for n in names]
     out = simulator.simulate_grid(preps, sweep, machine)
     if fold and refine and "fold_exact" in out:
@@ -67,8 +78,9 @@ def sweep_grid(names, sweep, fold=True, max_events=None, refine=True,
                 continue
             if built(name).program.num_instructions > REFINE_MAX_ROWS:
                 continue
-            sub = simulator.simulate_grid([prepared_for(name, fold=False)],
-                                          sweep, machine)
+            sub = simulator.simulate_grid(
+                [prepared_for(name, fold=False, machine=machine)],
+                sweep, machine)
             for k in out:
                 out[k][pi] = sub[k][0] if k != "fold_exact" else True
     return out

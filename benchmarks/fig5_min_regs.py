@@ -19,8 +19,8 @@ PAPER_MIN = {  # read off the paper's Fig 5
 CAPS = list(range(3, 17))
 
 
-def run(max_events=None, fold=True, target=0.95) -> list[dict]:
-    names = list(rvv.BENCHMARKS)
+def run(max_events=None, fold=True, target=0.95, names=None) -> list[dict]:
+    names = list(names or rvv.BENCHMARKS)
     sweep = simulator.SweepConfig.make(CAPS + [32])
     t0 = time.time()
     out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)

@@ -29,8 +29,8 @@ def narrow_cycles(full: dict) -> float:
     return 4.0 * compute_cycles + (naccess - l1_miss) * 1 + l1_miss * (1 + 5)
 
 
-def run(max_events=None, fold=True) -> list[dict]:
-    names = list(rvv.BENCHMARKS)
+def run(max_events=None, fold=True, names=None) -> list[dict]:
+    names = list(names or rvv.BENCHMARKS)
     sweep = simulator.SweepConfig.make([8, 32])
     t0 = time.time()
     out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)

@@ -11,8 +11,8 @@ from repro import rvv
 from repro.core import costmodel, simulator
 
 
-def run(max_events=None, fold=True) -> list[dict]:
-    names = list(rvv.BENCHMARKS)
+def run(max_events=None, fold=True, names=None) -> list[dict]:
+    names = list(names or rvv.BENCHMARKS)
     sweep = simulator.SweepConfig.make([8, 32])
     t00 = time.time()
     grid = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)

@@ -28,9 +28,12 @@ def _decode_trace(n_pages=64, steps=600, seed=0):
     return seq
 
 
-def run() -> list[dict]:
+def run(steps: int = 600) -> list[dict]:
+    """``steps`` is the decode-trace length — the harness budget knob (the
+    pool does one host->device dispatch per access, so wall time is linear
+    in it), analogous to ``max_events`` in the trace-driven suites."""
     rows = []
-    trace = _decode_trace()
+    trace = _decode_trace(steps=steps)
     for hot in (4, 8, 16, 32):
         for pol, pname in ((policies.FIFO, "fifo"), (policies.LRU, "lru")):
             t0 = time.time()

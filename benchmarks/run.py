@@ -5,8 +5,10 @@ studies).  Prints ``name,us_per_call,derived...`` CSV blocks per benchmark.
   python -m benchmarks.run table3 fig4           # subset
   python -m benchmarks.run --json BENCH_core.json fig4 table3
 
-``--json PATH`` additionally writes per-suite wall-clock and per-kernel
-cycle counts (the perf trajectory record for this machine).
+``--json PATH`` additionally writes per-suite wall-clock, per-suite XLA
+compile counts (the fused engine compiles once per program-shape bucket —
+machine-latency grids are traced, so they add rows, not compiles) and
+per-kernel cycle counts (the perf trajectory record for this machine).
 """
 
 from __future__ import annotations
@@ -14,6 +16,8 @@ from __future__ import annotations
 import json
 import sys
 import time
+
+from repro.core import simulator
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -56,11 +60,14 @@ def main(argv=None) -> int:
         mod = _MODULES[suite]
         print(f"\n## {suite} ({mod})", flush=True)
         t0 = time.time()
+        c0 = simulator.compile_count()
         rows = __import__(mod, fromlist=["main"]).main() or []
         dt = time.time() - t0
         print(f"## {suite} done in {dt:.1f}s", flush=True)
         report["suites"][suite] = {"wall_s": round(dt, 2),
-                                   "rows": len(rows)}
+                                   "rows": len(rows),
+                                   "compiles": simulator.compile_count()
+                                   - c0}
         for r in rows:
             cyc = {k: r[k] for k in _CYCLE_KEYS if k in r}
             if cyc and isinstance(r.get("name"), str):
@@ -72,6 +79,7 @@ def main(argv=None) -> int:
     print(f"\nALL BENCHMARKS DONE in {total:.1f}s")
     if json_path:
         report["total_wall_s"] = round(total, 2)
+        report["total_compiles"] = simulator.compile_count()
         with open(json_path, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         print(f"wrote {json_path}")

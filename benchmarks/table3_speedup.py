@@ -15,8 +15,8 @@ from repro import rvv
 from repro.core import isa, simulator
 
 
-def run(max_events=None, fold=True) -> list[dict]:
-    names = list(rvv.BENCHMARKS)
+def run(max_events=None, fold=True, names=None) -> list[dict]:
+    names = list(names or rvv.BENCHMARKS)
     sweep = simulator.SweepConfig.make([isa.NUM_ARCH_VREGS])
     t0 = time.time()
     out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)

@@ -7,13 +7,17 @@ the paper target sits beside the assigned LM architectures.
 
 from repro.core.isa import (MASK_REG, NUM_ARCH_VREGS, VL_ELEMS, VLEN_BITS,
                             VLEN_BYTES)
-from repro.core.simulator import DEFAULT_MACHINE, MachineParams
+from repro.core.simulator import DEFAULT_MACHINE, MachineParams, MachineSweep
 
 L31_VPU = DEFAULT_MACHINE                 # L1D 16 KB 2-way, mem 5 cyc
 CVRF_SIZES = (3, 4, 5, 6, 7, 8, 16)       # the paper's evaluated heights
 FULL_VRF = NUM_ARCH_VREGS                 # 32 architectural registers
 PAPER_CVRF = 8                            # the headline configuration
 
+# Table 1 gives the memory latency as a 1-5 cycle range: the whole range as
+# one traced sweep axis (one compiled executable for all five points).
+TABLE1_MEM_RANGE = MachineSweep.make((1, 2, 3, 4, 5))
+
 __all__ = ["L31_VPU", "CVRF_SIZES", "FULL_VRF", "PAPER_CVRF",
-           "MachineParams", "MASK_REG", "NUM_ARCH_VREGS", "VL_ELEMS",
-           "VLEN_BITS", "VLEN_BYTES"]
+           "TABLE1_MEM_RANGE", "MachineParams", "MachineSweep", "MASK_REG",
+           "NUM_ARCH_VREGS", "VL_ELEMS", "VLEN_BITS", "VLEN_BYTES"]

@@ -4,23 +4,25 @@ Public API:
   trace.Assembler / trace.MemoryMap / trace.Program   — RVV-lite trace eDSL
   interpreter.run / interpreter.run_dispersed          — functional oracles
   simulator.simulate_sweep / simulate_one              — cycle-level cVRF model
-  simulator.prepare / simulate_grid                    — fused P x C sweep grid
+  simulator.prepare / simulate_grid                    — fused (P, C, M) grid
+  simulator.MachineSweep                               — traced machine axes
   folding.plan                                         — exact periodic folding
   policies.FIFO / LRU / LFU / OPT                      — replacement policies
   planner.min_registers_for_hit_rate / policy_headroom — working-set planning
   costmodel.cpu_area / application_power               — analytic 28nm model
+  costmodel.check_machine_affine                       — machine-axis check
 """
 
 from repro.core import (costmodel, events, folding, interpreter, isa,
                         planner, policies, simulator, trace)
-from repro.core.simulator import (MachineParams, PreparedTrace, SweepConfig,
-                                  prepare, simulate_grid, simulate_one,
-                                  simulate_sweep)
+from repro.core.simulator import (MachineParams, MachineSweep, PreparedTrace,
+                                  SweepConfig, prepare, simulate_grid,
+                                  simulate_one, simulate_sweep)
 from repro.core.trace import Assembler, MemoryMap, Program
 
 __all__ = [
     "costmodel", "events", "folding", "interpreter", "isa", "planner",
-    "policies", "simulator", "trace", "MachineParams", "PreparedTrace",
-    "SweepConfig", "prepare", "simulate_grid", "simulate_one",
-    "simulate_sweep", "Assembler", "MemoryMap", "Program",
+    "policies", "simulator", "trace", "MachineParams", "MachineSweep",
+    "PreparedTrace", "SweepConfig", "prepare", "simulate_grid",
+    "simulate_one", "simulate_sweep", "Assembler", "MemoryMap", "Program",
 ]

@@ -36,6 +36,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core import isa
 
 VLEN = isa.VLEN_BITS
@@ -86,6 +88,85 @@ def cpu_area(n_vregs: int, vlen_bits: int = VLEN, n_lanes: int = 8,
     over = (n_vregs * TAG_AU_PER_SLOT + CTRL_AU) if dispersed else 0.0
     return AreaReport(vrf=vrf, coupling=couple, vpu_alu=alu,
                       dispersion_overhead=over, scalar_core=SCALAR_AU)
+
+
+# --------------------------------------------------------------------------
+# Analytic cross-check of traced machine-axis sweeps.
+# --------------------------------------------------------------------------
+
+# Counters that latency parameters may change.  Everything else is decided
+# by the replacement machinery, whose metadata is slot-grid-timestamped and
+# therefore machine-latency-invariant.
+TIMING_COUNTERS = ("cycles", "stall_cycles")
+
+
+def check_machine_affine(counters: dict, machines) -> dict:
+    """Analytic conformance check of a machine-swept counter grid.
+
+    The simulator's latency parameters (``l1_hit_cycles``,
+    ``uop_hit_cycles``, ``mem_latency``) enter only the cycle arithmetic,
+    never a hit/miss/eviction decision, so for counters on a trailing
+    machine axis of M points (from ``simulate_grid(..., MachineSweep)``):
+
+      * every non-timing counter must be *constant* along the machine axis;
+      * ``cycles`` and ``stall_cycles`` must be exactly affine in the three
+        latencies, with non-negative integer coefficients; the
+        ``mem_latency`` coefficient counts memory transfers, so it is at
+        least ``l1_misses`` (writebacks add to it).
+
+    Raises AssertionError (explicitly, so the check survives ``python -O``)
+    on any violation; returns the integer coefficient arrays ``{counter:
+    (const, a_l1hit, a_uop, a_mem)}`` with leading shape equal to the
+    grid's non-machine dimensions.  A latency held constant across the
+    sweep is not identifiable: its coefficient is reported as 0 and its
+    contribution folds into ``const``.  This is the closed-form cross-check
+    that a traced machine sweep agrees with the per-point machine model —
+    no re-simulation needed.
+    """
+    M = len(machines)
+    axes = (np.ones(M), np.asarray(machines.l1_hit_cycles, np.float64),
+            np.asarray(machines.uop_hit_cycles, np.float64),
+            np.asarray(machines.mem_latency, np.float64))
+    # Only the intercept plus latencies that actually vary enter the fit;
+    # a constant column would make the design rank-deficient and let the
+    # min-norm solution smear the intercept into meaningless slopes.
+    ident = [0] + [i for i in (1, 2, 3) if np.unique(axes[i]).size > 1]
+    design = np.stack([axes[i] for i in ident], axis=1)     # (M, k)
+    if np.linalg.matrix_rank(design) < len(ident):
+        raise AssertionError(
+            "machine sweep axes are collinear — per-latency coefficients "
+            "are not identifiable; decorrelate the sweep grid")
+    for name, v in counters.items():
+        if name in TIMING_COUNTERS or name in ("hit_rate", "event_scale",
+                                               "fold_exact"):
+            continue
+        v = np.asarray(v)
+        if not (v == v[..., :1]).all():
+            raise AssertionError(
+                f"counter {name!r} varies along the machine axis — latency "
+                "parameters leaked into a replacement decision")
+    coeffs = {}
+    pinv = np.linalg.pinv(design)                     # (k, M)
+    for name in TIMING_COUNTERS:
+        y = np.asarray(counters[name], np.float64)    # (..., M)
+        c = np.einsum("km,...m->...k", pinv, y)       # (..., k)
+        resid = np.einsum("mk,...k->...m", design, c) - y
+        if not np.abs(resid).max() < 0.5:
+            raise AssertionError(
+                f"counter {name!r} is not affine in the machine latencies "
+                f"(max residual {np.abs(resid).max():.3f})")
+        full = np.zeros(y.shape[:-1] + (4,))
+        full[..., ident] = c
+        coeffs[name] = np.rint(full).astype(np.int64)
+    # The mem_latency slope of total cycles counts memory transfers:
+    # >= l1_misses, identifiable only when the sweep varies mem_latency.
+    if 3 in ident:
+        slope = coeffs["cycles"][..., 3]
+        misses = np.asarray(counters["l1_misses"])[..., 0]
+        if not (slope >= misses).all():
+            raise AssertionError(
+                "cycles' mem_latency slope fell below l1_misses")
+    return coeffs
 
 
 # --------------------------------------------------------------------------

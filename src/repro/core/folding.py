@@ -19,6 +19,14 @@ simulator accumulates three counter sets — total (weighted), period A and
 period B — and reports ``fold_exact`` when A == B, i.e. the trace really was
 in steady state and the algebraic extrapolation is exact.
 
+Machine axes: the fold plan depends only on the *address stream* and the
+static L1 geometry (warm-up streams 2x its line count, see
+:func:`warm_lines_for`) — never on the traced latency parameters, which
+affect cycle arithmetic but no replacement decision.  The A == B
+certificate is therefore evaluated independently at every (capacity,
+policy, machine) grid point, so one fold plan extrapolates exactly across
+a whole traced machine sweep.
+
 A *super-period* groups ``unit`` consecutive iterations (8 by default when
 the count allows) so that sub-cacheline strides (e.g. 4-byte broadcast
 streams, 8 elements per 32-byte line) complete a whole line per measured
@@ -32,6 +40,12 @@ import dataclasses
 import numpy as np
 
 from repro.core.trace import Program
+
+
+def warm_lines_for(l1_sets: int, l1_ways: int) -> int:
+    """Warm-up stream length (cachelines) for an L1 geometry: 2x its line
+    count reaches LRU steady state within every set before measurement."""
+    return 2 * l1_sets * l1_ways
 
 
 @dataclasses.dataclass
@@ -114,6 +128,47 @@ def plan(program: Program, warm_lines: int = 1024,
             seen |= cur
         return len(set(news[1:])) <= 1
 
+    def reuse_gaps_stationary(s, e, P, start=2) -> bool:
+        """True when the multiset of cross-period line-reuse gaps landing in
+        each super-period is the same for every period (first ``start``
+        periods own first-touch transients and are exempt).
+
+        This is the translation-invariance the A == B certificate silently
+        assumes.  Two streams walking one region at different line rates
+        (e.g. a stride-64 load overtaken by a stride-32 store) re-touch
+        line ``2k`` at periods ``k`` and ``2k - 1``: every per-line gap is
+        unique, but the gap *arriving* at period ``p`` grows with ``p``, so
+        the reuse distance crosses the L1 reach somewhere inside the
+        extrapolated region — the two measured periods still agree while
+        the steady state they certify is not the block's.  Such folds stay
+        honest: folded for speed, never certified exact."""
+        a = addr[s:e]
+        idx = np.flatnonzero(a >= 0)
+        if idx.size == 0:
+            return True
+        lines = (a[idx] >> 5).astype(np.int64)
+        per = idx // P
+        order = np.argsort(lines, kind="stable")   # trace order within line
+        l_s, p_s = lines[order], per[order]
+        cross = (l_s[1:] == l_s[:-1]) & (p_s[1:] > p_s[:-1])
+        p2 = p_s[1:][cross]                        # period the reuse lands in
+        gap = (p_s[1:] - p_s[:-1])[cross]
+        keep = p2 >= start
+        p2, gap = p2[keep], gap[keep]
+        nper = (e - s) // P
+        if nper <= start:
+            return True
+        if p2.size == 0:
+            return True
+        counts = np.bincount(p2, minlength=nper)[start:]
+        if (counts != counts[0]).any():
+            return False
+        if counts[0] == 0:
+            return True
+        o = np.lexsort((gap, p2))
+        sig = gap[o].reshape(nper - start, counts[0])
+        return bool((sig == sig[0]).all())
+
     def emit_range(lo, hi, children, w, wa, wb, in_fold):
         cur = lo
         for ch in children:
@@ -154,6 +209,8 @@ def plan(program: Program, warm_lines: int = 1024,
         P = u * nd.bl
         rest = reps - warm - 2
         dropped.append((nd.s + (warm + 2) * P, nd.e))
+        if not reuse_gaps_stationary(nd.s, nd.e, P):
+            state["non_stationary"] = True
         for sp in range(warm + 2):
             lo = nd.s + sp * P
             hi = lo + P
@@ -182,8 +239,10 @@ def plan(program: Program, warm_lines: int = 1024,
     # caches in period-B-end state, the real trace in last-period state.
     # If any kept row AFTER a folded block touches a line its dropped
     # periods touched, the runtime A == B check cannot see the difference,
-    # so the plan must not be certified exact.
-    certifiable = True
+    # so the plan must not be certified exact.  Within-loop divergence
+    # (non-stationary reuse gaps, see ``reuse_gaps_stationary``) is caught
+    # the same way: fold anyway, never certify.
+    certifiable = not state.get("non_stationary", False)
     for d_lo, d_hi in dropped:
         tail = rows[np.searchsorted(rows, d_hi):]
         if not tail.size:

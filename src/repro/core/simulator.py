@@ -31,6 +31,17 @@ Engine architecture (fused instruction-level sweep engine):
     dispatch; the compiled executable is cached by padded shape (power-of-two
     buckets) and the per-program ``spill_line0`` is traced, not static, so
     different traces share one executable.
+  * **Traced machine axes.**  The latency parameters of the machine model
+    (``l1_hit_cycles``, ``uop_hit_cycles``, ``mem_latency``) are traced
+    sweep axes exactly like capacity/policy: :class:`MachineSweep` holds M
+    machine points and :func:`simulate_grid` vmaps them into a ``(P, C, M)``
+    counter grid, so a whole latency-sensitivity study is one dispatch and
+    one compile per program-shape bucket.  Only ``l1_sets``/``l1_ways``
+    stay static — they determine the L1 state array shapes.  Latencies
+    never influence replacement decisions (all recency/age metadata is
+    driven by the slot-grid timestamp, not by cycles), so every non-timing
+    counter is invariant along the machine axis and ``cycles`` is affine in
+    ``mem_latency`` — the analytic cross-check in ``core.costmodel``.
   * **Exact periodic folding.**  ``core.folding`` uses ``Assembler.repeat``
     metadata to simulate only warm-up + two measured periods of each hot
     loop and extrapolate counters algebraically via per-instruction integer
@@ -48,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -59,12 +71,16 @@ from repro.core.events import NO_NEXT_USE, EventStream
 from repro.core.trace import Program
 
 # ---------------------------------------------------------------------------
-# Static machine parameters (Table 1).
+# Machine parameters (Table 1): static L1 geometry + traced latency axes.
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class MachineParams:
+    """One machine point.  ``l1_sets``/``l1_ways`` are static (they size the
+    L1 state arrays); the three latency fields are *traced* by the engine, so
+    machines sharing a geometry share one compiled executable."""
+
     l1_sets: int = 256            # 16 KB / 32 B lines / 2 ways
     l1_ways: int = 2
     l1_hit_cycles: int = 0        # data-path hits overlap the vector pipe
@@ -76,6 +92,70 @@ class MachineParams:
 
 
 DEFAULT_MACHINE = MachineParams()
+
+
+@dataclasses.dataclass
+class MachineSweep:
+    """Machine sweep axis: M traced latency points over one static L1
+    geometry.  The latency arrays are vmapped through the fused step, so the
+    whole machine grid shares one executable per program-shape bucket."""
+
+    l1_hit_cycles: np.ndarray     # (M,) int32 data-path L1 hit cycles
+    uop_hit_cycles: np.ndarray    # (M,) int32 spill/fill uop hit cycles
+    mem_latency: np.ndarray       # (M,) int32 main-memory latency
+    l1_sets: int = 256            # static: L1 state shape
+    l1_ways: int = 2              # static: L1 state shape
+
+    @staticmethod
+    def make(mem_latency, l1_hit_cycles=0, uop_hit_cycles=1,
+             l1_sets=256, l1_ways=2) -> "MachineSweep":
+        mem = np.atleast_1d(np.asarray(mem_latency, np.int32))
+        l1h = np.broadcast_to(np.asarray(l1_hit_cycles, np.int32),
+                              mem.shape).copy()
+        uop = np.broadcast_to(np.asarray(uop_hit_cycles, np.int32),
+                              mem.shape).copy()
+        return MachineSweep(l1h, uop, mem, l1_sets, l1_ways)
+
+    @staticmethod
+    def product(mem_latencies, l1_hit_cycles=(0,), uop_hit_cycles=(1,),
+                l1_sets=256, l1_ways=2) -> "MachineSweep":
+        """Cartesian latency grid as one machine axis (parameter order
+        mirrors :meth:`make`)."""
+        mem, l1h, uop = [], [], []
+        for m in mem_latencies:
+            for h in l1_hit_cycles:
+                for u in uop_hit_cycles:
+                    mem.append(m), l1h.append(h), uop.append(u)
+        return MachineSweep(np.asarray(l1h, np.int32),
+                            np.asarray(uop, np.int32),
+                            np.asarray(mem, np.int32), l1_sets, l1_ways)
+
+    @staticmethod
+    def from_params(points) -> "MachineSweep":
+        """Stack MachineParams points (which must share an L1 geometry)."""
+        points = list(points)
+        geo = {(p.l1_sets, p.l1_ways) for p in points}
+        if len(geo) != 1:
+            raise ValueError(
+                f"machine points mix L1 geometries {sorted(geo)}; "
+                "l1_sets/l1_ways are static (they size the L1 arrays) — "
+                "sweep them in an outer loop")
+        return MachineSweep(
+            np.asarray([p.l1_hit_cycles for p in points], np.int32),
+            np.asarray([p.uop_hit_cycles for p in points], np.int32),
+            np.asarray([p.mem_latency for p in points], np.int32),
+            points[0].l1_sets, points[0].l1_ways)
+
+    def point(self, m: int) -> MachineParams:
+        """The m-th machine point as a scalar MachineParams."""
+        return MachineParams(self.l1_sets, self.l1_ways,
+                             int(self.l1_hit_cycles[m]),
+                             int(self.uop_hit_cycles[m]),
+                             int(self.mem_latency[m]))
+
+    def __len__(self):
+        return len(self.mem_latency)
+
 
 COUNTER_NAMES = (
     "cycles", "stall_cycles", "vrf_hits", "vrf_misses", "spills", "fills",
@@ -121,26 +201,29 @@ class SweepConfig:
 # ---------------------------------------------------------------------------
 
 
-def _l1_init(p: MachineParams):
+def _l1_init(l1_sets: int, l1_ways: int):
     # Packed (sets, ways, 2) int32: [:, :, 0] = line tag (-1 free),
     # [:, :, 1] = age << 1 | dirty.  Age dominates the packed word, so LRU
     # argmin over it matches argmin over the raw age; packing makes the
     # update a single 2-wide scatter per access.
-    l1 = jnp.zeros((p.l1_sets, p.l1_ways, 2), jnp.int32)
+    l1 = jnp.zeros((l1_sets, l1_ways, 2), jnp.int32)
     return l1.at[:, :, 0].set(-1)
 
 
-def _l1_access(l1, line, is_write, now, active, p: MachineParams,
-               hit_cost: int | None = None):
+def _l1_access(l1, line, is_write, now, active, l1_sets: int,
+               hit_cost, mem_latency):
     """One cacheline access, LRU within the set, write-allocate + write-back.
 
     Returns ``(l1', cycles, hit)``; the state update is a masked scatter at
     the touched (set, way) entry, a no-op when ``active`` is False, and
-    ``cycles`` is already gated by ``active``.  ``hit_cost`` overrides the
-    hit cycles (0 for pipelined data accesses, 1 for spill/fill uops).
+    ``cycles`` is already gated by ``active``.  ``hit_cost`` (the L1 hit
+    cycles of this access class: data path vs spill/fill uop) and
+    ``mem_latency`` are traced int32 scalars — machine sweep axes — while
+    ``l1_sets`` stays static because it indexes the state array.  Hit/miss
+    state transitions do not depend on the latencies, only ``cycles`` does.
     """
     line = line.astype(jnp.int32)
-    set_idx = line % p.l1_sets
+    set_idx = line % l1_sets
     row = l1[set_idx]                              # (ways, 2)
     row_tags = row[:, 0]
     eq = row_tags == line
@@ -149,11 +232,10 @@ def _l1_access(l1, line, is_write, now, active, p: MachineParams,
     old = row[way]
     old_dirty = old[1] & 1
     writeback = ~hit & (old[0] >= 0) & (old_dirty == 1)
-    hc = p.l1_hit_cycles if hit_cost is None else hit_cost
     cycles = jnp.where(
-        hit, hc,
-        hc + p.mem_latency
-        + jnp.where(writeback, p.mem_latency, 0)).astype(jnp.int32)
+        hit, hit_cost,
+        hit_cost + mem_latency
+        + jnp.where(writeback, mem_latency, 0)).astype(jnp.int32)
     w = jnp.int32(is_write)
     new = jnp.stack([line, (now << 1) | jnp.where(hit, old_dirty | w, w)])
     l1_new = l1.at[set_idx, way].set(jnp.where(active, new, old))
@@ -165,8 +247,9 @@ def _l1_access(l1, line, is_write, now, active, p: MachineParams,
 # ---------------------------------------------------------------------------
 
 
-def _make_step(p: MachineParams, slots_used, track_ab, spill0, cfg):
+def _make_step(l1_sets, slots_used, track_ab, spill0, cfg, mach):
     capacity, policy, anf = cfg
+    l1_hit, uop_hit, mem_lat = mach
     full_vrf = capacity >= isa.NUM_ARCH_VREGS
     valid_mask = jnp.arange(isa.NUM_ARCH_VREGS) < capacity
     spill0 = spill0.astype(jnp.int32)
@@ -209,10 +292,10 @@ def _make_step(p: MachineParams, slots_used, track_ab, spill0, cfg):
             # register — both 1-cycle uops through the L1.
             l1, c_sp, h_sp = _l1_access(
                 l1, spill0 + jnp.maximum(vrow[policies.TAG], 0), True, now,
-                do_spill, p, hit_cost=p.uop_hit_cycles)
+                do_spill, l1_sets, uop_hit, mem_lat)
             l1, c_fl, h_fl = _l1_access(
                 l1, spill0 + jnp.maximum(rg[s].astype(jnp.int32), 0), False,
-                now, do_fill, p, hit_cost=p.uop_hit_cycles)
+                now, do_fill, l1_sets, uop_hit, mem_lat)
             cache = policies.apply_access(
                 cache, active=active & ~full_vrf, raw_hit=raw_hit,
                 hit_slot=slot, install_slot=tslot, tag=rg[s], now=now,
@@ -234,7 +317,7 @@ def _make_step(p: MachineParams, slots_used, track_ab, spill0, cfg):
                 continue
             active = mv[m]
             l1, c_m, h_m = _l1_access(l1, ml[m], mw[m], now0 + 3 + m,
-                                      active, p)
+                                      active, l1_sets, l1_hit, mem_lat)
             memc += c_m
             l1h += i32(active & h_m)
             l1m += i32(active & ~h_m)
@@ -255,23 +338,45 @@ def _make_step(p: MachineParams, slots_used, track_ab, spill0, cfg):
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _run_grid(p: MachineParams, slots_used, track_ab, arrays, spill0s, cfg):
-    """(P, T) trace grid x (C,) configs -> (P, C) counter dicts.
+# Number of times the grid engine has been traced (== XLA compiles): the
+# body below only executes under jax tracing, so the counter increments
+# exactly once per new (static signature, shape bucket) cache entry.
+_COMPILES = 0
 
-    The jit cache keyed on the (static) machine/lane signature and the
+
+def compile_count() -> int:
+    """Grid-engine compiles so far (one per program-shape bucket)."""
+    return _COMPILES
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3),
+                   donate_argnums=(4, 5))
+def _run_grid(l1_sets, l1_ways, slots_used, track_ab, arrays, spill0s,
+              cfg, mach):
+    """(P, T) trace grid x (C,) configs x (M,) machines -> (P, C, M, 12).
+
+    The jit cache keyed on the (static) L1-geometry/lane signature and the
     (padded) array shapes is the compiled-executable level of the benchmark
-    cache: any suite whose grid pads to the same bucket reuses the build.
+    cache: any suite whose grid pads to the same bucket reuses the build —
+    including every machine-latency point, since ``mach`` is traced.  The
+    trace grid and spill bases are donated (they are rebuilt from the host
+    copies each call), trimming peak memory on accelerator backends.
     """
+    global _COMPILES
+    _COMPILES += 1
 
     def one_program(arr, sp0):
         def one_cfg(c):
-            step = _make_step(p, slots_used, track_ab, sp0, c)
-            z = jnp.zeros(len(COUNTER_NAMES), jnp.int32)
-            carry = (policies.CacheState.init(isa.NUM_ARCH_VREGS),
-                     _l1_init(p), jnp.int32(0), jnp.int32(0), z, z, z)
-            (_, _, _, _, ctr, ctrA, ctrB), _ = jax.lax.scan(step, carry, arr)
-            return ctr, ctrA, ctrB
+            def one_machine(m):
+                step = _make_step(l1_sets, slots_used, track_ab, sp0, c, m)
+                z = jnp.zeros(len(COUNTER_NAMES), jnp.int32)
+                carry = (policies.CacheState.init(isa.NUM_ARCH_VREGS),
+                         _l1_init(l1_sets, l1_ways), jnp.int32(0),
+                         jnp.int32(0), z, z, z)
+                (_, _, _, _, ctr, ctrA, ctrB), _ = jax.lax.scan(
+                    step, carry, arr)
+                return ctr, ctrA, ctrB
+            return jax.vmap(one_machine)(mach)
         return jax.vmap(one_cfg)(cfg)
 
     return jax.vmap(one_program)(arrays, spill0s)
@@ -319,7 +424,8 @@ def _slice_prep(prep: PreparedTrace, t: int) -> PreparedTrace:
 
 def prepare(program_or_events, fold: bool = False,
             max_events: int | None = None,
-            warm_lines: int = 1024) -> PreparedTrace:
+            warm_lines: int | None = None,
+            machine=None) -> PreparedTrace:
     """Expand a trace once; optionally fold its periodic loops (exact for
     steady-state traces) or truncate it to ``max_events`` flat events at an
     instruction boundary (approximate, the legacy prefix mode).
@@ -328,9 +434,17 @@ def prepare(program_or_events, fold: bool = False,
     drop the extrapolation-weighted measured periods and corrupt both the
     counters and the exactness certificate, so ``max_events`` forces
     ``fold`` off.
+
+    ``machine`` (a :class:`MachineParams` or :class:`MachineSweep`) sizes
+    the fold warm-up to the static L1 geometry the trace will be swept on
+    (2x its line count, see ``folding.warm_lines_for``); traced latency
+    axes never affect preparation.  An explicit ``warm_lines`` wins.
     """
     if isinstance(program_or_events, PreparedTrace):
         return program_or_events
+    if warm_lines is None:
+        geo = machine if machine is not None else DEFAULT_MACHINE
+        warm_lines = folding.warm_lines_for(geo.l1_sets, geo.l1_ways)
     if max_events is not None:
         fold = False
     plan = None
@@ -416,14 +530,31 @@ def _stack(preps: list[PreparedTrace], pad_to: int | None = None):
     return arrays, spill0s, slots_used
 
 
+def _dispatch_grid(machine: MachineSweep, slots_used, track_ab, arrays,
+                   spill0s, cfg, mach):
+    """One `_run_grid` call with donation noise suppressed: the counter
+    outputs are far smaller than the donated trace grid, so XLA may decline
+    the alias and warn — harmless, the donation is an upper bound."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _run_grid(machine.l1_sets, machine.l1_ways, slots_used,
+                         track_ab, tuple(jnp.asarray(a) for a in arrays),
+                         jnp.asarray(spill0s), cfg, mach)
+
+
 def simulate_grid(preps: list, sweep: SweepConfig,
-                  machine: MachineParams = DEFAULT_MACHINE,
+                  machine=DEFAULT_MACHINE,
                   batch_programs: bool = False) -> dict[str, np.ndarray]:
     """Simulate P prepared traces under C configurations in one sweep call.
 
-    Returns dict of (P, C) counter arrays plus ``hit_rate`` and, for folded
-    traces, ``fold_exact`` (measured periods A == B => the algebraic
-    extrapolation is exact).
+    ``machine`` is either one :class:`MachineParams` point (returns (P, C)
+    counter arrays, the classic grid) or a :class:`MachineSweep` of M traced
+    latency points (returns (P, C, M) arrays — the whole machine grid in the
+    same dispatch, one compile per program-shape bucket).  Alongside the raw
+    counters the dict carries ``hit_rate`` and, for folded traces,
+    ``fold_exact`` (measured periods A == B => the algebraic extrapolation
+    is exact, certified independently at every (C, M) grid point).
 
     ``batch_programs=True`` pads every trace to one bucket and vmaps the
     program axis into a single XLA dispatch — the right shape for
@@ -435,30 +566,38 @@ def simulate_grid(preps: list, sweep: SweepConfig,
     """
     preps = [prepare(p) if not isinstance(p, PreparedTrace) else p
              for p in preps]
+    squeeze_m = not isinstance(machine, MachineSweep)
+    machines = MachineSweep.from_params([machine]) if squeeze_m else machine
     cfg = (jnp.asarray(sweep.capacity), jnp.asarray(sweep.policy),
            jnp.asarray(sweep.alloc_no_fetch))
+    mach = (jnp.asarray(machines.l1_hit_cycles),
+            jnp.asarray(machines.uop_hit_cycles),
+            jnp.asarray(machines.mem_latency))
     if batch_programs:
         arrays, spill0s, slots_used = _stack(preps)
         track_ab = any(p.num_folds for p in preps)
-        ctr, ctrA, ctrB = _run_grid(machine, slots_used, track_ab,
-                                    tuple(jnp.asarray(a) for a in arrays),
-                                    jnp.asarray(spill0s), cfg)
+        ctr, ctrA, ctrB = _dispatch_grid(machines, slots_used, track_ab,
+                                         arrays, spill0s, cfg, mach)
         ctr, ctrA, ctrB = (np.asarray(x) for x in (ctr, ctrA, ctrB))
     else:
         outs = []
         for prep in preps:
             arrays, spill0s, slots_used = _stack([prep])
-            outs.append(_run_grid(
-                machine, slots_used, prep.num_folds > 0,
-                tuple(jnp.asarray(a) for a in arrays),
-                jnp.asarray(spill0s), cfg))
+            outs.append(_dispatch_grid(machines, slots_used,
+                                       prep.num_folds > 0, arrays, spill0s,
+                                       cfg, mach))
         ctr = np.concatenate([np.asarray(o[0]) for o in outs])
         ctrA = np.concatenate([np.asarray(o[1]) for o in outs])
         ctrB = np.concatenate([np.asarray(o[2]) for o in outs])
+    if squeeze_m:
+        ctr, ctrA, ctrB = ctr[:, :, 0], ctrA[:, :, 0], ctrB[:, :, 0]
     out = {k: ctr[..., i] for i, k in enumerate(COUNTER_NAMES)}
+    grid_shape = out["cycles"].shape              # (P, C) or (P, C, M)
+    per_prog = (-1,) + (1,) * (len(grid_shape) - 1)
     if any(p.num_folds for p in preps):
         steady = (ctrA == ctrB).all(axis=-1)
-        steady &= np.asarray([p.certifiable for p in preps])[:, None]
+        steady &= np.asarray(
+            [p.certifiable for p in preps]).reshape(per_prog)
         unfolded = np.asarray([p.num_folds == 0 for p in preps])
         steady[unfolded] = True
         out["fold_exact"] = steady
@@ -466,25 +605,27 @@ def simulate_grid(preps: list, sweep: SweepConfig,
     with np.errstate(divide="ignore", invalid="ignore"):
         out["hit_rate"] = np.where(total > 0, out["vrf_hits"] / total, 1.0)
     out["event_scale"] = np.broadcast_to(
-        np.asarray([p.event_scale for p in preps])[:, None],
-        out["cycles"].shape).copy()
+        np.asarray([p.event_scale for p in preps]).reshape(per_prog),
+        grid_shape).copy()
     return out
 
 
 def simulate_sweep(program_or_events, sweep: SweepConfig,
-                   machine: MachineParams = DEFAULT_MACHINE,
+                   machine=DEFAULT_MACHINE,
                    max_events: int | None = None,
                    fold: bool = False) -> dict[str, np.ndarray]:
     """Simulate one trace under C configurations (vmapped). Returns dict of
-    (C,)-shaped counter arrays plus derived metrics."""
-    prep = prepare(program_or_events, fold=fold, max_events=max_events)
+    (C,)-shaped counter arrays — (C, M)-shaped when ``machine`` is a
+    :class:`MachineSweep` — plus derived metrics."""
+    prep = prepare(program_or_events, fold=fold, max_events=max_events,
+                   machine=machine)
     out = simulate_grid([prep], sweep, machine)
     return {k: v[0] for k, v in out.items()}
 
 
 def simulate_one(program, capacity, policy=policies.FIFO,
                  alloc_no_fetch=False,
-                 machine: MachineParams = DEFAULT_MACHINE,
+                 machine=DEFAULT_MACHINE,
                  max_events: int | None = None,
                  fold: bool = False) -> dict[str, float]:
     sweep = SweepConfig.make([capacity], policy, alloc_no_fetch)
@@ -528,11 +669,16 @@ class ScalarCost:
     load_cycles: float = 1.5
     overhead_per_iter: int = 3
 
-    def cycles(self, machine: MachineParams = DEFAULT_MACHINE) -> int:
-        return int(
-            self.flop_ops * self.flop_cycles
-            + self.int_ops
-            + self.loads * self.load_cycles
-            + self.stores
-            + self.unique_lines * machine.mem_latency
-            + self.loop_iters * self.overhead_per_iter)
+    def cycles(self, machine=DEFAULT_MACHINE):
+        """Scalar-core cycles; with a :class:`MachineSweep` the result is an
+        (M,) int64 array over the swept memory latencies."""
+        base = (self.flop_ops * self.flop_cycles
+                + self.int_ops
+                + self.loads * self.load_cycles
+                + self.stores
+                + self.loop_iters * self.overhead_per_iter)
+        mem = self.unique_lines * np.asarray(machine.mem_latency)
+        total = base + mem
+        if isinstance(machine, MachineSweep):
+            return total.astype(np.int64)
+        return int(total)

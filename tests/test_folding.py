@@ -10,9 +10,15 @@ exactly that.
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except Exception:                                     # pragma: no cover
+    HAVE_HYP = False
+
 from repro.core import folding, isa, simulator
 from repro.core.trace import Assembler, MemoryMap
-from repro.rvv import dropout, gemv
+from repro.rvv import dropout, gemv, jacobi2d, somier
 
 
 def _stream_program(iters=2048):
@@ -86,3 +92,114 @@ def test_fold_weight_algebra():
     plan = folding.plan(p)
     assert int(plan.weight.sum()) == p.num_instructions
     assert int(plan.wa.sum()) == int(plan.wb.sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Property test: fold_exact => extrapolation exact, across traced machines.
+# ---------------------------------------------------------------------------
+
+
+def _random_repeat_program(rng: np.random.Generator):
+    """A random (foldable-shaped) repeat program: 1-3 streams with random
+    strides and ops, a random working set, random iteration count."""
+    mm = MemoryMap()
+    n_streams = int(rng.integers(1, 4))
+    iters = int(rng.integers(64, 512))
+    bufs = [mm.alloc(f"s{i}", iters * isa.VL_ELEMS + 64)
+            for i in range(n_streams)]
+    a = Assembler("rand_repeat")
+    with a.repeat(iters):
+        for i, buf in enumerate(bufs):
+            stride = int(rng.choice([4, 32, 64]))
+            reg = 1 + i
+            a.vle(reg, buf, stride=stride)
+            if rng.random() < 0.5:
+                a.vmacc(reg + n_streams, reg, reg)
+            else:
+                a.vmul_sc(reg + n_streams, reg, 1.5)
+        a.vse(1 + n_streams, bufs[0] + 32, stride=32)
+    return a.finalize(mm)
+
+
+def _random_machines(rng: np.random.Generator) -> simulator.MachineSweep:
+    m = 3      # fixed M: machine VALUES vary per seed, shapes stay cached
+    return simulator.MachineSweep(
+        l1_hit_cycles=rng.integers(0, 3, m).astype(np.int32),
+        uop_hit_cycles=rng.integers(1, 4, m).astype(np.int32),
+        mem_latency=rng.integers(1, 12, m).astype(np.int32))
+
+
+def _check_fold_exact_implies_equal(program, machines):
+    """The property: wherever the engine certifies ``fold_exact``, the
+    algebraically extrapolated counters equal the full unfolded simulation
+    — independently at every (capacity, machine) grid point."""
+    sweep = simulator.SweepConfig.make([3, 8])
+    fold = simulator.simulate_sweep(program, sweep, machines, fold=True)
+    if "fold_exact" not in fold:
+        return                                    # nothing folded: vacuous
+    full = simulator.simulate_sweep(program, sweep, machines)
+    exact = fold["fold_exact"]
+    assert exact.shape == full["cycles"].shape
+    for k in simulator.COUNTER_NAMES:
+        np.testing.assert_array_equal(
+            fold[k][exact], full[k][exact],
+            err_msg=f"{k}: certified-exact fold diverged from full run")
+
+
+# The deterministic seed pins run regardless of hypothesis availability:
+# seed 4 is the draw that exposed the non-stationary-reuse certification
+# hole, and a random strategy would almost never resample it.  The wider
+# sweep rides the slow tier; with hypothesis installed an extra randomized
+# search runs on top.
+@pytest.mark.parametrize("seed", (0, 2, 4))
+def test_fold_exact_property_random_programs(seed):
+    rng = np.random.default_rng(seed)
+    _check_fold_exact_implies_equal(
+        _random_repeat_program(rng), _random_machines(rng))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", (1, 3, *range(5, 30)))
+def test_fold_exact_property_random_programs_exhaustive(seed):
+    rng = np.random.default_rng(seed)
+    _check_fold_exact_implies_equal(
+        _random_repeat_program(rng), _random_machines(rng))
+
+
+if HAVE_HYP:                                          # pragma: no cover
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_fold_exact_property_hypothesis(seed):
+        rng = np.random.default_rng(seed)
+        _check_fold_exact_implies_equal(
+            _random_repeat_program(rng), _random_machines(rng))
+
+
+# ---------------------------------------------------------------------------
+# Regression pin: fold_exact truth per kernel must not silently flip.
+# ---------------------------------------------------------------------------
+
+# Paper-size certification status (at capacity 8, the paper's design point).
+# dropout/gemv stream steadily and certify exact; jacobi2d's ping-pong
+# steps and somier's force phases defeat the period detector, so their
+# folds must stay HONESTLY flagged inexact until a state-snapshot pass
+# (ROADMAP) makes them exact — a folding change that flips any of these
+# silently is a certification bug.
+FOLD_EXACT_TRUTH = {
+    dropout: True,
+    gemv: True,
+    jacobi2d: False,
+    somier: False,
+}
+
+
+@pytest.mark.parametrize("mod", sorted(FOLD_EXACT_TRUTH, key=lambda m:
+                                       m.__name__))
+def test_fold_exact_certification_pinned(mod):
+    from benchmarks import common    # shares paper-size builds + fold plans
+    name = mod.__name__.rsplit(".", 1)[-1]
+    prep = common.prepared_for(name, fold=True)
+    out = simulator.simulate_grid([prep], simulator.SweepConfig.make([8]))
+    assert "fold_exact" in out, f"{name} no longer folds at all"
+    assert bool(out["fold_exact"].all()) is FOLD_EXACT_TRUTH[mod], (
+        f"{name}: fold_exact certification flipped")

@@ -1,15 +1,25 @@
-"""Golden counter regression: pins ``simulate_one`` counters for a small
-GEMM and FlashAttention-2 trace at capacities {3, 8, 32} x {FIFO, LRU}.
+"""Golden counter regression + differential conformance matrix.
 
-The values were captured from the original per-event scan engine; the fused
+Part 1 pins ``simulate_one`` counters for a small GEMM and
+FlashAttention-2 trace at capacities {3, 8, 32} x {FIFO, LRU}.  The values
+were captured from the original per-event scan engine; the fused
 instruction-level engine must reproduce them bit-for-bit (the engine
 refactor is behaviour-preserving on unfolded traces).
+
+Part 2 runs EVERY ``rvv/`` kernel (reduced size) through both the fused
+jax engine and the numpy reference interpreter at three (capacity, policy,
+machine) grid points and asserts bit-identical dispersion counters.  The
+machine latencies are traced sweep axes, so this doubles as the check that
+latency parameters never leak into a replacement decision: the
+interpreter has no timing model at all, yet must agree at every machine
+point.
 """
 
+import numpy as np
 import pytest
 
 from repro import rvv
-from repro.core import policies, simulator
+from repro.core import interpreter, policies, simulator
 
 # (kernel, capacity, policy) -> counters from the per-event seed engine.
 GOLDEN = {
@@ -67,3 +77,60 @@ def test_golden_counters(name, cap, policy):
     want = GOLDEN[(name, cap, policy)]
     got = {k: int(out[k]) for k in want}
     assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Differential conformance: fused engine vs numpy interpreter, every kernel.
+# ---------------------------------------------------------------------------
+
+# Three (capacity, policy, machine) grid points.  The machines share one L1
+# geometry (l1_sets/l1_ways are static engine parameters); their latency
+# fields span the traced axes.
+CONF_POINTS = (
+    (3, policies.FIFO, simulator.MachineParams(mem_latency=1)),
+    (4, policies.LRU, simulator.MachineParams(mem_latency=10,
+                                              uop_hit_cycles=2)),
+    (8, policies.FIFO, simulator.MachineParams(mem_latency=5,
+                                               l1_hit_cycles=1)),
+)
+
+# Counters both engines define: the interpreter moves real data and has no
+# timing model, so agreement here certifies the dispersion *mechanism*.
+DIFF_COUNTERS = ("vrf_hits", "vrf_misses", "spills", "fills")
+
+_SIM_GRID = {}
+
+
+def _sim_grid(name):
+    """One fused (C=3, M=3) dispatch per kernel; the conformance points sit
+    on its diagonal.  Cached so each kernel simulates once."""
+    if name not in _SIM_GRID:
+        sweep = simulator.SweepConfig(
+            np.asarray([c for c, _, _ in CONF_POINTS], np.int32),
+            np.asarray([p for _, p, _ in CONF_POINTS], np.int32),
+            np.zeros(len(CONF_POINTS), bool))
+        machines = simulator.MachineSweep.from_params(
+            [m for _, _, m in CONF_POINTS])
+        prep = simulator.prepare(_program(name))
+        _SIM_GRID[name] = simulator.simulate_grid([prep], sweep, machines)
+    return _SIM_GRID[name]
+
+
+@pytest.mark.parametrize("point", range(len(CONF_POINTS)))
+@pytest.mark.parametrize("name", sorted(rvv.BENCHMARKS))
+def test_differential_conformance(name, point):
+    cap, policy, _machine = CONF_POINTS[point]
+    disp = interpreter.run_dispersed(_program(name), cap, policy)
+    grid = _sim_grid(name)
+    got = {k: int(grid[k][0, point, point]) for k in DIFF_COUNTERS}
+    want = {k: int(getattr(disp, k)) for k in DIFF_COUNTERS}
+    assert got == want
+
+
+def test_conformance_counters_machine_invariant():
+    """The differential counters must not move along the machine axis —
+    the interpreter (no timing model) agrees at *every* machine point only
+    because latencies never reach the replacement machinery."""
+    grid = _sim_grid("densenet121_l105")
+    for k in DIFF_COUNTERS:
+        assert (grid[k] == grid[k][..., :1]).all(), k

@@ -1,0 +1,120 @@
+"""Traced machine-parameter sweep axes: the (P, C, M) grid contract.
+
+The engine promotes ``l1_hit_cycles`` / ``uop_hit_cycles`` / ``mem_latency``
+from static jit arguments to traced sweep axes.  These tests pin the three
+properties that make that safe and worthwhile:
+
+  1. *bit-identity*: a machine grid point equals a standalone run at that
+     machine's ``MachineParams`` (the classic one-point path),
+  2. *one compile per program-shape bucket*: changing machine latency
+     VALUES never recompiles — only shapes and the static L1 geometry do,
+  3. *analytic conformance*: non-timing counters are machine-invariant and
+     cycles are affine in the latencies (``costmodel.check_machine_affine``).
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks import ablation_sensitivity as ablation
+from benchmarks import common
+from repro import rvv
+from repro.core import costmodel, policies, simulator
+
+# One machine-axis shape (M = 6) shared by every test below: machine VALUES
+# are traced, so all (C = 2)-config grids here reuse a single executable.
+MACHINES = simulator.MachineSweep.product(
+    (1, 3, 10), uop_hit_cycles=(1, 2))
+
+_PREPS = {}
+
+
+def _prep(name="densenet121_l105"):
+    if name not in _PREPS:
+        b = rvv.BENCHMARKS[name]
+        _PREPS[name] = simulator.prepare(b.build(**b.reduced_params).program)
+    return _PREPS[name]
+
+
+def test_machine_grid_matches_per_point_runs():
+    sweep = simulator.SweepConfig.make([3, 8], policies.LRU)
+    prep = _prep()
+    grid = simulator.simulate_grid([prep], sweep, MACHINES)
+    assert grid["cycles"].shape == (1, 2, len(MACHINES))
+    for m in range(len(MACHINES)):
+        ref = simulator.simulate_grid([prep], sweep, MACHINES.point(m))
+        for k in simulator.COUNTER_NAMES:
+            np.testing.assert_array_equal(grid[k][:, :, m], ref[k],
+                                          err_msg=f"{k} at machine {m}")
+
+
+def test_machine_values_never_recompile():
+    sweep = simulator.SweepConfig.make([4, 6])
+    prep = _prep()
+    a = simulator.MachineSweep.make((1, 5, 9, 2, 7, 31), uop_hit_cycles=3)
+    simulator.simulate_grid([prep], sweep, a)          # warm the bucket
+    c0 = simulator.compile_count()
+    b = simulator.MachineSweep.make((4, 8, 15, 16, 23, 42), l1_hit_cycles=1)
+    simulator.simulate_grid([prep], sweep, b)
+    assert simulator.compile_count() == c0, (
+        "a machine-latency value change retraced the engine — the latency "
+        "axes must be traced, not static")
+
+
+def test_l1_geometry_stays_static():
+    with pytest.raises(ValueError, match="static"):
+        simulator.MachineSweep.from_params([
+            simulator.MachineParams(l1_sets=64),
+            simulator.MachineParams(l1_sets=256)])
+
+
+def test_machine_affine_cross_check():
+    sweep = simulator.SweepConfig.make([8, 32])
+    out = simulator.simulate_grid([_prep()], sweep, MACHINES)
+    coeffs = costmodel.check_machine_affine(out, MACHINES)
+    # The cap-32 full VRF never spills/fills: its uop-latency slope is 0
+    # and its mem slope still covers the kernel's own data misses.
+    assert coeffs["cycles"][0, 1, 2] == 0          # uop_hit coefficient
+    assert coeffs["cycles"][0, 1, 3] >= 1          # mem_latency coefficient
+
+
+def test_scalar_cost_over_machine_sweep():
+    c = simulator.ScalarCost(flop_ops=10, unique_lines=4)
+    got = c.cycles(simulator.MachineSweep.make((1, 5)))
+    np.testing.assert_array_equal(got, [24, 40])
+    assert c.cycles(simulator.MachineParams(mem_latency=5)) == 40
+
+
+# ---------------------------------------------------------------------------
+# The ablation suite: full machine grid in one dispatch per L1 geometry.
+# ---------------------------------------------------------------------------
+
+
+def test_ablation_grid_single_dispatch():
+    """The ablation machine grid must add zero compiles once its shape
+    buckets are warm — the whole latency grid rides the traced axes.  (The
+    per-point bit-identity of its counters is pinned above on a reduced
+    kernel and exhaustively at paper size in the slow tier below.)"""
+    rows = ablation.run(max_events=6_000)
+    assert len(rows) == (len(ablation.APPS) * len(ablation.MEM_LATENCIES)
+                         * len(ablation.L1_KBYTES))
+    c0 = simulator.compile_count()
+    ablation.run(max_events=6_000)                 # identical shapes: cached
+    assert simulator.compile_count() == c0
+
+
+@pytest.mark.slow
+def test_ablation_grid_bit_identity_paper_size():
+    """Exhaustive version of the above: the paper-size ablation grid equals
+    per-machine runs on every (program, capacity, machine) point."""
+    sweep = simulator.SweepConfig.make([8, 32])
+    for l1_kb in ablation.L1_KBYTES:
+        machines = ablation.machine_grid(l1_kb)
+        grid = common.sweep_grid(ablation.APPS, sweep, machine=machines)
+        costmodel.check_machine_affine(grid, machines)
+        for mi in range(len(machines)):
+            per = common.sweep_grid(ablation.APPS, sweep,
+                                    machine=machines.point(mi))
+            for k in simulator.COUNTER_NAMES:
+                np.testing.assert_array_equal(
+                    grid[k][:, :, mi], per[k],
+                    err_msg=f"{k} l1={l1_kb}k machine {mi}")
