@@ -1,12 +1,13 @@
 # Developer entry points.  The tier-1 gate is `make test-fast` (the pytest
 # default: everything not marked `slow`, kept under ~3 minutes including the
 # differential conformance matrix); `make test` adds the paper-size sweeps
-# and the exhaustive (program, capacity, machine) grids.
+# and the exhaustive (program, capacity, machine) grids; `make docs-check`
+# executes the README quickstart block and examples/quickstart.py.
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 
-.PHONY: test-fast test bench
+.PHONY: test-fast test bench docs-check
 
 test-fast:
 	$(PYTEST) -x -q
@@ -16,3 +17,6 @@ test:
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_core.json
+
+docs-check:
+	$(PYTEST) -x -q tests/test_docs.py

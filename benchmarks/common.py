@@ -52,6 +52,10 @@ def prepared_for(name, fold=True, max_events=None,
 
 # A folded trace whose steadiness check fails is re-simulated in full when
 # the full trace is affordable; bigger traces keep the (flagged) fold.
+# Certified exact-outer plans (docs/folding.md) make this pass rarer: a
+# kernel whose nested plan could not certify (jacobi2d's ping-pong, the
+# batched/multi-head outer loops) now extrapolates exactly instead of
+# re-running unfolded.
 REFINE_MAX_ROWS = 400_000
 
 

@@ -28,7 +28,9 @@ def run(max_events=None, fold=True, names=None) -> list[dict]:
         vec_cycles = float(out["cycles"][pi, 0]) * float(
             out["event_scale"][pi, 0])
         scal_cycles = b.scalar_cost(**b.paper_params).cycles()
-        paper = rvv.PAPER_TABLE3[name]
+        # Beyond-paper kernels (conv2d_batched, mha) have no Table 3 row.
+        paper = rvv.PAPER_TABLE3.get(name, dict(speedup="", active_regs="",
+                                                util=""))
         active = len(built.program.active_vregs())
         rows.append(dict(
             name=name, us_per_call=round(us_each, 1),

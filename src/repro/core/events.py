@@ -70,6 +70,22 @@ class EventStream:
         return int(self.events_per_row.sum())
 
 
+def _reg_valid(tbl, op, vd, vs1, vs2) -> np.ndarray:
+    """(T, 3) REG-slot validity mask: which vs1/vs2/vd fields name live
+    cVRF accesses (``v0`` is pinned and never generates one).  Shared by
+    :func:`expand` and :func:`next_use_grid` so the fused engine and the
+    interpreter's Belady pre-pass always see the same access set."""
+    mask_reg = isa.MASK_REG
+    reg_valid = np.zeros((op.shape[0], 3), np.bool_)
+    # slot 0/1: vs1 / vs2 reads.
+    reg_valid[:, 0] = tbl["reads_vs1"][op] & (vs1 >= 0) & (vs1 != mask_reg)
+    reg_valid[:, 1] = tbl["reads_vs2"][op] & (vs2 >= 0) & (vs2 != mask_reg)
+    # slot 2: vd access (read and/or write).
+    reg_valid[:, 2] = ((tbl["reads_vd"][op] | tbl["writes_vd"][op])
+                       & (vd >= 0) & (vd != mask_reg))
+    return reg_valid
+
+
 def expand(program: Program, rows: np.ndarray | None = None) -> EventStream:
     """Vectorised numpy expansion of a trace into per-instruction matrices.
 
@@ -85,8 +101,6 @@ def expand(program: Program, rows: np.ndarray | None = None) -> EventStream:
         addr, cost_override = addr[rows], cost_override[rows]
     T = op.shape[0]
 
-    r_vs1 = tbl["reads_vs1"][op]
-    r_vs2 = tbl["reads_vs2"][op]
     r_vd = tbl["reads_vd"][op]
     w_vd = tbl["writes_vd"][op]
     full_ow = tbl["full_overwrite"][op]
@@ -95,14 +109,8 @@ def expand(program: Program, rows: np.ndarray | None = None) -> EventStream:
     cost = np.where(cost_override >= 0, cost_override,
                     tbl["cost"][op]).astype(np.int32)
 
-    mask_reg = isa.MASK_REG
-    reg_valid = np.zeros((T, 3), np.bool_)
+    reg_valid = _reg_valid(tbl, op, vd, vs1, vs2)
     reg = np.zeros((T, 3), np.int8)
-    # slot 0/1: vs1 / vs2 reads.
-    reg_valid[:, 0] = r_vs1 & (vs1 >= 0) & (vs1 != mask_reg)
-    reg_valid[:, 1] = r_vs2 & (vs2 >= 0) & (vs2 != mask_reg)
-    # slot 2: vd access (read and/or write).
-    reg_valid[:, 2] = (r_vd | w_vd) & (vd >= 0) & (vd != mask_reg)
     reg[:, 0], reg[:, 1], reg[:, 2] = vs1, vs2, vd
     # Serial tag check (paper 3.2.1): vs2's miss handling must not evict the
     # already-resolved vs1; vd's must not evict vs1 or vs2.
@@ -145,6 +153,20 @@ def expand(program: Program, rows: np.ndarray | None = None) -> EventStream:
         repeats=list(program.repeats) if rows is None else [],
     )
     return ev
+
+
+def next_use_grid(program: Program) -> np.ndarray:
+    """(T, 3) Belady next-use indices for a program's vs1/vs2/vd REG slots.
+
+    The shared index space (row-major over the (T, 3) slot grid) is what the
+    fused engine feeds OPT; the numpy interpreter uses this helper so its
+    OPT victim choices compare the exact same farthest-next-use metric —
+    the precondition for OPT rows of the differential conformance matrix.
+    """
+    op, vd, vs1, vs2 = program.op, program.vd, program.vs1, program.vs2
+    reg_valid = _reg_valid(isa.op_table(), op, vd, vs1, vs2)
+    reg = np.stack([vs1, vs2, vd], axis=1).astype(np.int8)
+    return _next_use(reg, reg_valid)
 
 
 def _next_use(reg: np.ndarray, reg_valid: np.ndarray) -> np.ndarray:

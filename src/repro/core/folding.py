@@ -31,6 +31,39 @@ A *super-period* groups ``unit`` consecutive iterations (8 by default when
 the count allows) so that sub-cacheline strides (e.g. 4-byte broadcast
 streams, 8 elements per 32-byte line) complete a whole line per measured
 period and the per-period counter deltas are constant.
+
+State-snapshot period detection (multi-iteration steady states)
+---------------------------------------------------------------
+
+Some kernels reach steady state only over a period *longer than one
+iteration of any single emitted repeat*: jacobi2d's ping-pong buffers swap
+source and destination every time step, so the trace is periodic with
+period TWO steps, a loop the Assembler never emitted as one repeat block.
+:func:`plan` therefore runs a detection pass over runs of adjacent
+top-level repeat blocks: it finds the smallest k for which the instruction
+stream is literally periodic with a k-block super-period, then certifies
+the candidate by *state snapshots* — fingerprints of the address stream's
+cache-relevant state (per-line last-touch offsets + the stale-line set) at
+every candidate period boundary.  The first boundary from which all
+fingerprints agree sizes the warm-up; a candidate whose fingerprints never
+stabilise is rejected.  Accepted candidates are synthesised as ordinary
+fold segments (``ping-pong => k = 2`` blocks per period) and folded by the
+standard warm-up + A + B machinery.
+
+Exact-outer planning (certifying folds the nested plan cannot)
+--------------------------------------------------------------
+
+The nested plan folds every sufficiently long loop, including loops inside
+another fold's warm-up and measured periods.  That maximises compression
+but leaves the simulated cache state *approximate* inside each kept outer
+period, and drops iterations whose lines later rows reuse — both of which
+forfeit the exactness certificate (``FoldPlan.certifiable``).  When that
+happens, :func:`plan` re-plans in *exact-outer* mode: only the outermost
+foldable block of each nest folds, and its warm-up and measured periods
+are simulated in full (no nested folding), so A and B measure the true
+per-period counters.  The certified exact-outer plan keeps more rows than
+the nested one but replaces a full unfolded re-simulation; the nested plan
+is kept whenever exact-outer cannot be certified either.
 """
 
 from __future__ import annotations
@@ -40,6 +73,10 @@ import dataclasses
 import numpy as np
 
 from repro.core.trace import Program
+
+#: Fields that must match for two trace rows to be considered identical by
+#: the super-period detector (everything the simulator reads).
+_PERIODIC_FIELDS = ("op", "vd", "vs1", "vs2", "addr", "imm", "cost_override")
 
 
 def warm_lines_for(l1_sets: int, l1_ways: int) -> int:
@@ -61,6 +98,8 @@ class FoldPlan:
     certifiable: bool = True   # False: kept rows after a folded block reuse
     #   the block's dropped lines, so the runtime A == B check cannot see
     #   the post-loop state divergence and must not certify exactness.
+    num_super_periods: int = 0   # detected multi-block super-periods folded
+    exact_outer: bool = False    # plan came from the exact-outer re-plan
 
     @property
     def kept_fraction(self) -> float:
@@ -73,18 +112,22 @@ class _Node:
     bl: int
     cnt: int
     children: list
+    super_: bool = False     # synthesised multi-block super-period
+    warm: int = 0            # snapshot-derived warm-up (super nodes only)
 
     @property
     def e(self) -> int:
         return self.s + self.bl * self.cnt
 
 
-def _build_tree(segments) -> list:
-    """Nest (start, block_len, count) segments by containment (they are
-    properly nested or disjoint by construction)."""
-    nodes = [_Node(s, bl, cnt, []) for s, bl, cnt in segments]
-    nodes.sort(key=lambda n: (n.s, -(n.bl * n.cnt)))
+def _build_tree(nodes: list) -> list:
+    """Nest _Node segments by containment (they are properly nested or
+    disjoint by construction).  Children are rebuilt from scratch so the
+    same nodes can be re-treed across planning passes."""
+    nodes = sorted(nodes, key=lambda n: (n.s, -(n.bl * n.cnt)))
     roots, stack = [], []
+    for nd in nodes:
+        nd.children = []
     for nd in nodes:
         while stack and nd.s >= stack[-1].e:
             stack.pop()
@@ -93,21 +136,124 @@ def _build_tree(segments) -> list:
     return roots
 
 
-def plan(program: Program, warm_lines: int = 1024,
-         units: tuple = (8, 4, 2, 1)) -> FoldPlan | None:
-    """Build a fold plan for ``program`` (None when nothing folds).
+# ---------------------------------------------------------------------------
+# State-snapshot super-period detection.
+# ---------------------------------------------------------------------------
 
-    ``warm_lines``: cachelines each fold's warm-up must stream before the
-    measured periods (default 2x a 16 KB / 32 B-line L1).
+
+def _rows_periodic(program: Program, s: int, P: int, cnt: int) -> bool:
+    """True when rows [s, s + cnt*P) are literally periodic with period P
+    on every simulator-visible field."""
+    if cnt < 2:
+        return False
+    for f in _PERIODIC_FIELDS:
+        arr = getattr(program, f)
+        if not np.array_equal(arr[s: s + (cnt - 1) * P],
+                              arr[s + P: s + cnt * P]):
+            return False
+    return True
+
+
+def _boundary_fingerprint(addr: np.ndarray, s: int, P: int, j: int,
+                          seen_before: set):
+    """Cache-state fingerprint at the end of period ``j`` of a candidate
+    super-period: (line -> last-touch offset within the period) plus the
+    set of *stale* lines (touched earlier, untouched this period).  Two
+    boundaries with equal fingerprints present the same relative-recency
+    state to an LRU-like cache — absolute ages differ, but every
+    replacement decision the engine makes compares ages, not reads them.
     """
+    a = addr[s + j * P: s + (j + 1) * P]
+    idx = np.flatnonzero(a >= 0)
+    lines = (a[idx] >> 5).astype(np.int64)
+    # last occurrence per line: unique() on the reversed stream returns the
+    # first (= originally last) index of each line.
+    rev_lines = lines[::-1]
+    u, first_rev = np.unique(rev_lines, return_index=True)
+    last_off = idx[len(idx) - 1 - first_rev]
+    touched = set(u.tolist())
+    stale = frozenset(seen_before - touched)
+    return (tuple(u.tolist()), tuple(last_off.tolist()), stale), touched
+
+
+def _snapshot_warm(addr: np.ndarray, s: int, P: int, cnt: int) -> int | None:
+    """Snapshot the address stream's state at every candidate period
+    boundary and return the first warm-up count w >= 1 from which all
+    remaining fingerprints agree (steady state reached), or None when the
+    fingerprints never stabilise."""
+    pre = addr[:s]
+    seen = set(np.unique(pre[pre >= 0] >> 5).tolist())
+    fps = []
+    for j in range(cnt):
+        fp, touched = _boundary_fingerprint(addr, s, P, j, seen)
+        seen |= touched
+        fps.append(fp)
+    for w in range(1, cnt - 2):          # leave >= A + B after the warm-up
+        if all(fp == fps[w] for fp in fps[w + 1:]):
+            return w
+    return None
+
+
+def detect_super_periods(program: Program):
+    """Detect multi-block steady-state periods over runs of adjacent
+    top-level repeat blocks.
+
+    Returns synthesised ``_Node`` segments (``super_=True``) whose period
+    spans k >= 1 consecutive top-level blocks, with the snapshot-derived
+    warm-up attached.  A ping-pong time loop (jacobi2d) detects k = 2; a
+    plain unrolled loop of identical blocks detects k = 1.
+    """
+    base = [_Node(s, bl, cnt, []) for s, bl, cnt in program.repeats]
+    if not base:
+        return []
+    roots = _build_tree(base)
+    runs, cur = [], [roots[0]]
+    for nd in roots[1:]:
+        if nd.s == cur[-1].e:
+            cur.append(nd)
+        else:
+            runs.append(cur)
+            cur = [nd]
+    runs.append(cur)
+    out = []
+    for run in runs:
+        m = len(run)
+        if m < 4:
+            continue
+        S = run[0].s
+        for k in range(1, m // 4 + 1):
+            cnt = m // k
+            P = run[k].s - S
+            if any(run[j * k].s != S + j * P for j in range(cnt)):
+                continue            # unequal block lengths inside the period
+            if S + cnt * P > run[-1].e:
+                continue
+            if not _rows_periodic(program, S, P, cnt):
+                continue
+            warm = _snapshot_warm(program.addr, S, P, cnt)
+            if warm is None:
+                continue
+            out.append(_Node(S, P, cnt, [], super_=True, warm=warm))
+            break                   # smallest k wins
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan construction.
+# ---------------------------------------------------------------------------
+
+
+def _plan_once(program: Program, nodes: list, warm_lines: int, units: tuple,
+               exact_outer: bool) -> FoldPlan | None:
+    """One planning pass.  ``exact_outer``: the outermost folded block of
+    each nest simulates its kept periods in full (children never fold), so
+    the measured A and B are the true per-period counters."""
     T = program.num_instructions
-    if not program.repeats:
-        return None
     addr = program.addr
-    roots = _build_tree(program.repeats)
+    roots = _build_tree(nodes)
 
     ranges: list[tuple[int, int, int, int, int]] = []   # (lo, hi, w, wa, wb)
-    state = {"folds": 0}
+    state = {"folds": 0, "supers": 0}
     dropped: list[tuple[int, int]] = []     # extrapolated (unkept) regions
 
     def lines_in(lo, hi) -> int:
@@ -180,32 +326,42 @@ def plan(program: Program, warm_lines: int = 1024,
             ranges.append((cur, hi, w, wa, wb))
 
     def emit_node(nd, w, wa, wb, in_fold):
-        # Pick the unit whose warm-up + 2 measured super-periods keeps the
-        # fewest rows (larger units need fewer warm-up periods when strides
-        # are sub-cacheline, smaller units waste less on coarse strides).
-        # Units whose early super-periods touch a *constant* number of
-        # distinct lines are strongly preferred: a varying count means a
-        # sub-line access pattern longer than the unit (e.g. a 4-byte store
-        # stream crossing a cacheline every few iterations), which the
-        # measured period cannot represent.
-        chosen = None
-        for u in units:
-            if nd.cnt % u:
-                continue
-            reps = nd.cnt // u
-            per_sp = lines_in(nd.s, nd.s + u * nd.bl)
-            warm = max(1, -(-warm_lines // per_sp)) if per_sp else 1
-            if reps >= warm + 3:                    # >=1 extrapolated period
-                steady_u = new_lines_steady(nd.s, u * nd.bl, reps)
-                kept = (warm + 2) * u * nd.bl
-                key = (not steady_u, kept)          # steady units first
-                if chosen is None or key < chosen[3]:
-                    chosen = (u, reps, warm, key)
+        if nd.super_:
+            # Synthesised super-period: the period length IS the detected
+            # k-block span and the warm-up came from the state snapshots.
+            u, reps, warm = 1, nd.cnt, max(1, nd.warm)
+            kept = (warm + 2) * nd.bl
+            chosen = ((u, reps, warm, (False, kept))
+                      if reps >= warm + 3 else None)
+        else:
+            # Pick the unit whose warm-up + 2 measured super-periods keeps
+            # the fewest rows (larger units need fewer warm-up periods when
+            # strides are sub-cacheline, smaller units waste less on coarse
+            # strides).  Units whose early super-periods touch a *constant*
+            # number of distinct lines are strongly preferred: a varying
+            # count means a sub-line access pattern longer than the unit
+            # (e.g. a 4-byte store stream crossing a cacheline every few
+            # iterations), which the measured period cannot represent.
+            chosen = None
+            for u in units:
+                if nd.cnt % u:
+                    continue
+                reps = nd.cnt // u
+                per_sp = lines_in(nd.s, nd.s + u * nd.bl)
+                warm = max(1, -(-warm_lines // per_sp)) if per_sp else 1
+                if reps >= warm + 3:                # >=1 extrapolated period
+                    steady_u = new_lines_steady(nd.s, u * nd.bl, reps)
+                    kept = (warm + 2) * u * nd.bl
+                    key = (not steady_u, kept)      # steady units first
+                    if chosen is None or key < chosen[3]:
+                        chosen = (u, reps, warm, key)
         if chosen is None or chosen[3][1] >= 0.95 * (nd.e - nd.s):
             emit_range(nd.s, nd.e, nd.children, w, wa, wb, in_fold)
             return
         u, reps, warm, _ = chosen
         state["folds"] += 1
+        if nd.super_:
+            state["supers"] += 1
         P = u * nd.bl
         rest = reps - warm - 2
         dropped.append((nd.s + (warm + 2) * P, nd.e))
@@ -214,7 +370,6 @@ def plan(program: Program, warm_lines: int = 1024,
         for sp in range(warm + 2):
             lo = nd.s + sp * P
             hi = lo + P
-            kids = [c for c in nd.children if c.s >= lo and c.e <= hi]
             if sp < warm:
                 f = (w, wa, wb)
             elif sp == warm:                        # measured period A
@@ -222,7 +377,11 @@ def plan(program: Program, warm_lines: int = 1024,
             else:                                   # measured period B
                 m = 1 + rest
                 f = (w * m, wa * m, wb * m) if in_fold else (w * m, 0, w)
-            emit_range(lo, hi, kids, *f, in_fold=True)
+            if exact_outer:
+                ranges.append((lo, hi, *f))         # full, un-nested period
+            else:
+                kids = [c for c in nd.children if c.s >= lo and c.e <= hi]
+                emit_range(lo, hi, kids, *f, in_fold=True)
 
     emit_range(0, T, roots, 1, 0, 0, False)
     if not state["folds"]:
@@ -256,4 +415,34 @@ def plan(program: Program, warm_lines: int = 1024,
             break
     return FoldPlan(rows=rows, weight=w, wa=wa, wb=wb,
                     num_folds=state["folds"], num_rows_full=T,
-                    certifiable=certifiable)
+                    certifiable=certifiable,
+                    num_super_periods=state["supers"],
+                    exact_outer=exact_outer)
+
+
+def plan(program: Program, warm_lines: int = 1024,
+         units: tuple = (8, 4, 2, 1)) -> FoldPlan | None:
+    """Build a fold plan for ``program`` (None when nothing folds).
+
+    ``warm_lines``: cachelines each fold's warm-up must stream before the
+    measured periods (default 2x a 16 KB / 32 B-line L1).
+
+    Planning is two-pass: the *nested* pass folds every sufficiently long
+    loop (maximum compression); when its certificate fails — nested folds
+    perturb the warm-up state, or dropped iterations' lines are reused
+    later — the *exact-outer* pass re-plans with only the outermost block
+    of each nest folded and its kept periods simulated in full.  The
+    certified plan wins; when neither certifies, the nested plan is kept
+    (folded for speed, honestly flagged).
+    """
+    if not program.repeats:
+        return None
+    base = [_Node(s, bl, cnt, []) for s, bl, cnt in program.repeats]
+    nodes = base + detect_super_periods(program)
+    nested = _plan_once(program, nodes, warm_lines, units, exact_outer=False)
+    if nested is None or nested.certifiable:
+        return nested
+    exact = _plan_once(program, nodes, warm_lines, units, exact_outer=True)
+    if exact is not None and exact.certifiable:
+        return exact
+    return nested

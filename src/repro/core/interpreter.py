@@ -20,6 +20,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import events as ev_mod
 from repro.core import isa, policies
 from repro.core.trace import Program
 
@@ -189,7 +190,15 @@ class _DispersedRF:
 
 def run_dispersed(program: Program, capacity: int,
                   policy: int = policies.FIFO) -> RunResult:
-    """Register-Dispersion execution: semantics must match :func:`run`."""
+    """Register-Dispersion execution: semantics must match :func:`run`.
+
+    For OPT the interpreter runs a Belady pre-pass
+    (:func:`repro.core.events.next_use_grid`): every register access carries
+    the grid index of that register's next use, in the same (T, 3) slot
+    index space the fused engine scans, so both engines' farthest-next-use
+    victim choices — and therefore the differential counters — agree
+    bit-for-bit.
+    """
     if capacity < 3:
         raise ValueError("cVRF must hold at least 3 registers (3 operands)")
     spill_bytes = (isa.NUM_ARCH_VREGS - 1) * isa.VLEN_BYTES
@@ -198,6 +207,11 @@ def run_dispersed(program: Program, capacity: int,
     mem = np.zeros((base + spill_bytes) // 4, np.float32)
     mem[: program.memory.size] = program.memory
     rf = _DispersedRF(capacity, policy, mem, base // 4)
+
+    # Belady pre-pass: OPT needs each access's next-use index; the other
+    # policies ignore it (the accessor stores it but never reads it back).
+    nxt = (ev_mod.next_use_grid(program) if policy == policies.OPT
+           else np.zeros((program.num_instructions, 3), np.int32))
 
     tbl = isa.op_table()
     for i in range(program.num_instructions):
@@ -211,15 +225,17 @@ def run_dispersed(program: Program, capacity: int,
         def val(reg, slot):
             return rf.v0 if reg == isa.MASK_REG else rf.phys[slot]
 
-        s1 = (rf.access(vs1, write=False, read=True)
+        s1 = (rf.access(vs1, write=False, read=True,
+                        next_use=int(nxt[i, 0]))
               if tbl["reads_vs1"][op] and vs1 >= 0 else -1)
-        s2 = (rf.access(vs2, write=False, read=True, locked=(vs1,))
+        s2 = (rf.access(vs2, write=False, read=True, locked=(vs1,),
+                        next_use=int(nxt[i, 1]))
               if tbl["reads_vs2"][op] and vs2 >= 0 else -1)
         sd = -1
         if (tbl["reads_vd"][op] or tbl["writes_vd"][op]) and vd >= 0:
             sd = rf.access(vd, write=bool(tbl["writes_vd"][op]),
                            read=bool(tbl["reads_vd"][op]),
-                           locked=(vs1, vs2))
+                           locked=(vs1, vs2), next_use=int(nxt[i, 2]))
 
         if op == isa.VLE:
             out = rf.mem[addr // 4: addr // 4 + VL].copy()

@@ -13,46 +13,23 @@ Models the paper's microarchitecture (§3, Table 1):
     access hits and no fills ever occur (real hardware has no compulsory
     misses — registers simply exist).
 
-Engine architecture (fused instruction-level sweep engine):
+Engine architecture (fused instruction-level sweep engine), in one line
+each — the full design narrative lives in ``docs/architecture.md``:
 
-  * **One scan step retires one instruction.**  ``core.events`` packs each
-    instruction's <=3 REG operands and <=2 MEM lines into fixed-width
-    per-instruction matrices; the step resolves the operand lanes with
-    masked, unrolled logic (serial vs1 -> vs2 -> vd order preserved), so the
-    scan is ~2-3x shorter than the old per-event stream and needs no kind
-    dispatch.  L1 and cVRF metadata updates are single masked scatters at
-    the touched entry instead of whole-state select-trees.  Counters are
-    identical to the per-event engine: timestamps come from the uncompacted
-    slot grid, a monotone map of the old event index, so every
-    relative-order decision (L1 LRU, cVRF FIFO/LRU/LFU/OPT) is unchanged.
-  * **Batched sweep grid.**  :func:`simulate_grid` pads multiple prepared
-    traces to one ``(P, T)`` grid and vmaps programs x configs, so a whole
-    benchmark suite (Fig 4, Table 3, policy headroom) is a single jitted
-    dispatch; the compiled executable is cached by padded shape (power-of-two
-    buckets) and the per-program ``spill_line0`` is traced, not static, so
-    different traces share one executable.
-  * **Traced machine axes.**  The latency parameters of the machine model
-    (``l1_hit_cycles``, ``uop_hit_cycles``, ``mem_latency``) are traced
-    sweep axes exactly like capacity/policy: :class:`MachineSweep` holds M
-    machine points and :func:`simulate_grid` vmaps them into a ``(P, C, M)``
-    counter grid, so a whole latency-sensitivity study is one dispatch and
-    one compile per program-shape bucket.  Only ``l1_sets``/``l1_ways``
-    stay static — they determine the L1 state array shapes.  Latencies
-    never influence replacement decisions (all recency/age metadata is
-    driven by the slot-grid timestamp, not by cycles), so every non-timing
-    counter is invariant along the machine axis and ``cycles`` is affine in
-    ``mem_latency`` — the analytic cross-check in ``core.costmodel``.
-  * **Exact periodic folding.**  ``core.folding`` uses ``Assembler.repeat``
-    metadata to simulate only warm-up + two measured periods of each hot
-    loop and extrapolate counters algebraically via per-instruction integer
-    weights (``total = head + warmup + A + (count - warmup - 1) * B``).  The
-    scan accumulates the A and B period counters separately; ``fold_exact``
-    reports A == B, i.e. the trace reached steady state and the
-    extrapolation is exact — replacing the old lossy ``MAX_EVENTS`` prefix
-    truncation.
+  * **One scan step retires one instruction** (``core.events`` packs the
+    <=3 REG + <=2 MEM lanes into fixed-width matrices; counters are
+    bit-identical to the old per-event engine).
+  * **Batched (P, C, M) sweep grid**: :func:`simulate_grid` vmaps programs
+    x configs x traced machine-latency points (:class:`MachineSweep`) into
+    one dispatch, compiled once per power-of-two program-shape bucket.
+  * **Exact periodic folding** (``core.folding``): warm-up + two measured
+    periods per hot loop, algebraic extrapolation, with the A == B
+    ``fold_exact`` certificate evaluated per (C, M) grid point — see
+    ``docs/folding.md`` for the certificate semantics and the
+    state-snapshot super-period detector.
 
-The whole sweep of Fig 4 (capacities 3..16 x policies x all nine kernels)
-is then one ``vmap(vmap(scan))`` dispatch.
+The whole sweep of Fig 4 (capacities 3..16 x policies x every kernel) is
+then one ``vmap(vmap(vmap(scan)))`` dispatch.
 """
 
 from __future__ import annotations

@@ -29,8 +29,7 @@ import numpy as np
 
 from repro.core import isa
 
-_FIELDS = ("op", "vd", "vs1", "vs2", "addr", "imm", "cost_override",
-           "stride", "stride2", "stride3")
+_FIELDS = ("op", "vd", "vs1", "vs2", "addr", "imm", "cost_override")
 
 
 @dataclasses.dataclass
@@ -118,38 +117,68 @@ class Assembler:
     def __init__(self, name: str = "program"):
         self.name = name
         self._cols = {f: [] for f in _FIELDS}
+        # Per-level address strides: _strides[k] is the stride applied by the
+        # (k+1)-th enclosing ``repeat``; one list per level, aligned with the
+        # instruction columns.  Levels are created lazily, so nests of any
+        # depth (batched conv, multi-head attention) cost nothing shallower
+        # kernels.
+        self._strides: list[list[int]] = []
         self._segs: list[tuple[int, int, int]] = []   # (start, block_len, n)
+
+    def _set_strides(self, strides) -> None:
+        n = len(self._cols["op"]) - 1          # the instruction just emitted
+        while len(self._strides) < len(strides):
+            self._strides.append([0] * n)
+        for lv, col in enumerate(self._strides):
+            col.append(int(strides[lv]) if lv < len(strides) else 0)
+
+    @staticmethod
+    def _stride_vec(strides, stride, stride2, stride3):
+        if strides is not None:
+            if stride or stride2 or stride3:
+                raise ValueError("pass either strides= or stride/stride2/"
+                                 "stride3, not both")
+            return tuple(int(s) for s in strides)
+        return (stride, stride2, stride3)
 
     # ---------------------------------------------------------------- emit --
     def _emit(self, op, vd=-1, vs1=-1, vs2=-1, addr=-1, imm=0.0,
-              cost=-1, stride=0, stride2=0, stride3=0):
+              cost=-1, strides=()):
         for r in (vd, vs1, vs2):
             if r != -1 and not (0 <= r < isa.NUM_ARCH_VREGS):
                 raise ValueError(f"bad vreg {r}")
         c = self._cols
         c["op"].append(op); c["vd"].append(vd); c["vs1"].append(vs1)
         c["vs2"].append(vs2); c["addr"].append(addr); c["imm"].append(imm)
-        c["cost_override"].append(cost); c["stride"].append(stride)
-        c["stride2"].append(stride2); c["stride3"].append(stride3)
+        c["cost_override"].append(cost)
+        self._set_strides(strides)
 
-    # Memory ops. ``stride`` advances ``addr`` per iteration of an enclosing
-    # ``repeat`` block.
-    def vle(self, vd, addr, stride=0, stride2=0, stride3=0):
-        self._emit(isa.VLE, vd=vd, addr=addr, stride=stride, stride2=stride2,
-                   stride3=stride3)
+    # Memory ops.  The per-level stride vector ``strides`` advances ``addr``
+    # by ``strides[k]`` per iteration of the (k+1)-th enclosing ``repeat``;
+    # the legacy ``stride``/``stride2``/``stride3`` keywords spell the first
+    # three levels.
+    def vle(self, vd, addr, stride=0, stride2=0, stride3=0, *, strides=None):
+        self._emit(isa.VLE, vd=vd, addr=addr,
+                   strides=self._stride_vec(strides, stride, stride2,
+                                            stride3))
 
-    def vse(self, vs, addr, stride=0, stride2=0, stride3=0):
-        self._emit(isa.VSE, vs1=vs, addr=addr, stride=stride,
-                   stride2=stride2, stride3=stride3)
+    def vse(self, vs, addr, stride=0, stride2=0, stride3=0, *, strides=None):
+        self._emit(isa.VSE, vs1=vs, addr=addr,
+                   strides=self._stride_vec(strides, stride, stride2,
+                                            stride3))
 
-    def vbcast(self, vd, addr, stride=0, stride2=0, stride3=0):
-        self._emit(isa.VBCAST, vd=vd, addr=addr, stride=stride,
-                   stride2=stride2, stride3=stride3)
+    def vbcast(self, vd, addr, stride=0, stride2=0, stride3=0, *,
+               strides=None):
+        self._emit(isa.VBCAST, vd=vd, addr=addr,
+                   strides=self._stride_vec(strides, stride, stride2,
+                                            stride3))
 
-    def vses(self, vs, addr, stride=0, stride2=0, stride3=0):
+    def vses(self, vs, addr, stride=0, stride2=0, stride3=0, *,
+             strides=None):
         """Store element 0 of vs as a 4-byte scalar (vfmv.f.s + fsw)."""
-        self._emit(isa.VSES, vs1=vs, addr=addr, stride=stride,
-                   stride2=stride2, stride3=stride3)
+        self._emit(isa.VSES, vs1=vs, addr=addr,
+                   strides=self._stride_vec(strides, stride, stride2,
+                                            stride3))
 
     # Arithmetic.
     def vadd(self, vd, vs1, vs2): self._emit(isa.VADD, vd, vs1, vs2)
@@ -181,13 +210,14 @@ class Assembler:
     @contextlib.contextmanager
     def repeat(self, n: int):
         """Replicate the enclosed block n times, advancing each memory-op
-        address by its ``stride`` per iteration (vectorised expansion).
+        address by the head of its per-level stride vector per iteration
+        (vectorised expansion).
 
-        Repeats nest two levels: after expansion, each instruction's
-        ``stride2`` becomes its ``stride`` and ``stride3`` its ``stride2``,
-        so enclosing repeats apply the outer-loop strides (e.g. inner loop
-        over K with stride 4, column-chunk loop with stride2 32, row loop
-        with stride3 = row pitch)."""
+        Repeats nest to ANY depth: after expansion the stride vector shifts
+        down one level (``strides[k+1]`` becomes ``strides[k]``), so each
+        enclosing repeat consumes the next level — e.g. an inner loop over K
+        with level-0 stride 4, a column-chunk loop at level 1, a row loop at
+        level 2, and a batch/head loop at level 3."""
         if n < 1:
             raise ValueError("repeat count must be >= 1")
         start = len(self._cols["op"])
@@ -198,19 +228,25 @@ class Assembler:
         block = {f: np.asarray(self._cols[f][start:], dtype=np.float64
                                if f == "imm" else np.int64)
                  for f in _FIELDS}
+        sblock = [np.asarray(col[start:], np.int64) for col in self._strides]
         reps = np.arange(n, dtype=np.int64)
         tiled = {f: np.tile(block[f], n) for f in _FIELDS}
-        stride = np.tile(block["stride"], n)
         addr = tiled["addr"].copy()
         mem = addr >= 0
-        addr[mem] = addr[mem] + np.repeat(reps, k)[mem] * stride[mem]
+        if sblock:
+            stride = np.tile(sblock[0], n)
+            addr[mem] = addr[mem] + np.repeat(reps, k)[mem] * stride[mem]
         tiled["addr"] = addr
-        tiled["stride"] = tiled["stride2"].copy()
-        tiled["stride2"] = tiled["stride3"].copy()
-        tiled["stride3"] = np.zeros_like(tiled["stride3"])
         for f in _FIELDS:
             del self._cols[f][start:]
             self._cols[f].extend(tiled[f].tolist())
+        # Shift the stride vector down one level (level 0 was consumed).
+        for lv, col in enumerate(self._strides):
+            del col[start:]
+            if lv + 1 < len(sblock):
+                col.extend(np.tile(sblock[lv + 1], n).tolist())
+            else:
+                col.extend([0] * (k * n))
         if n >= 2:
             # Tiling replicates any repeat blocks recorded inside this one;
             # replicate their metadata too, then record this block itself.

@@ -1,9 +1,13 @@
-"""RVV-lite benchmark suite — the nine applications of the paper's Table 2."""
+"""RVV-lite benchmark suite — the nine applications of the paper's Table 2
+plus two beyond-paper deep-nest workloads (batched conv, multi-head
+attention) exercising the per-level stride vectors of ``Assembler.repeat``.
+"""
 
 from __future__ import annotations
 
-from repro.rvv import (common, conv2d, dropout, flashattention2, gemm, gemv,
-                       jacobi2d, pathfinder, somier)
+from repro.rvv import (common, conv2d, conv2d_batched, dropout,
+                       flashattention2, gemm, gemv, jacobi2d, mha,
+                       pathfinder, somier)
 from repro.rvv.common import Benchmark, Built, check
 
 BENCHMARKS: dict[str, Benchmark] = {
@@ -37,6 +41,15 @@ BENCHMARKS: dict[str, Benchmark] = {
         flashattention2.scalar_cost, flashattention2.PAPER,
         flashattention2.REDUCED,
         "Seq. Length:200 Hidden Dim.:64 Block row:1 Block col:128"),
+    # Beyond-paper deep-nest workloads (4-level repeat nests; not in the
+    # paper's Table 2/3 — the paper columns stay blank in reports).
+    "conv2d_batched": Benchmark(
+        "conv2d_batched", "CNN", conv2d_batched.build,
+        conv2d_batched.scalar_cost, conv2d_batched.PAPER,
+        conv2d_batched.REDUCED, "32 x 32 x2ch x8imgs filter size:3"),
+    "mha": Benchmark(
+        "mha", "Transformer", mha.build, mha.scalar_cost, mha.PAPER,
+        mha.REDUCED, "Seq:40 Head Dim.:16 Heads:8"),
 }
 
 # The paper's Table 3 reference numbers, for side-by-side reporting.
@@ -53,5 +66,6 @@ PAPER_TABLE3 = {
 }
 
 __all__ = ["BENCHMARKS", "PAPER_TABLE3", "Benchmark", "Built", "check",
-           "common", "conv2d", "dropout", "flashattention2", "gemm", "gemv",
-           "jacobi2d", "pathfinder", "somier"]
+           "common", "conv2d", "conv2d_batched", "dropout",
+           "flashattention2", "gemm", "gemv", "jacobi2d", "mha",
+           "pathfinder", "somier"]

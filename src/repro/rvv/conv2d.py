@@ -3,6 +3,11 @@
 Two output rows are computed per pass sharing the broadcast filter weights
 (the "strategic grouping and unrolling of vector register names" the paper
 credits for fconv2d's resilience, Fig 6 discussion).
+
+The tap-loop emission (:func:`emit_taps`) is shared with the batched
+multi-channel variant (``rvv.conv2d_batched``), which wraps it in channel
+and batch repeats using the per-level stride vectors of
+``Assembler.repeat``.
 """
 
 from __future__ import annotations
@@ -20,6 +25,24 @@ REDUCED = dict(n=32, f=7)
 ACC0, ACC1, IN0, IN1 = 1, 2, 3, 4
 W = list(range(9, 16))          # v9..v15 hold one filter row
 ZR = 31
+
+
+def emit_taps(a: Assembler, ai: int, aw: int, fr: int, f: int, rs: int,
+              in_strides: tuple, w_strides: tuple = ()) -> None:
+    """One filter row of the two-output-row conv body: broadcast the f
+    weights of filter row ``fr``, then accumulate the f taps into ACC0/ACC1.
+
+    ``in_strides``/``w_strides`` are per-level stride vectors for the input
+    loads and weight broadcasts (the enclosing repeats decide how many
+    levels are live: chunk, row-pair, channel, batch).
+    """
+    for fc in range(f):
+        a.vbcast(W[fc], aw + (fr * f + fc) * 4, strides=w_strides)
+    for fc in range(f):
+        a.vle(IN0, ai + fr * rs + fc * 4, strides=in_strides)
+        a.vmacc(ACC0, IN0, W[fc])
+        a.vle(IN1, ai + (1 + fr) * rs + fc * 4, strides=in_strides)
+        a.vmacc(ACC1, IN1, W[fc])
 
 
 def build(n=256, f=7, seed=0) -> common.Built:
@@ -44,15 +67,7 @@ def build(n=256, f=7, seed=0) -> common.Built:
             a.vmv(ACC0, ZR)
             a.vmv(ACC1, ZR)
             for fr in range(f):
-                for fc in range(f):
-                    a.vbcast(W[fc], aw + (fr * f + fc) * 4)
-                for fc in range(f):
-                    a.vle(IN0, ai + fr * rs + fc * 4, stride=32,
-                          stride2=2 * rs)
-                    a.vmacc(ACC0, IN0, W[fc])
-                    a.vle(IN1, ai + (1 + fr) * rs + fc * 4, stride=32,
-                          stride2=2 * rs)
-                    a.vmacc(ACC1, IN1, W[fc])
+                emit_taps(a, ai, aw, fr, f, rs, in_strides=(32, 2 * rs))
             a.vse(ACC0, ao, stride=32, stride2=2 * rs)
             a.vse(ACC1, ao + rs, stride=32, stride2=2 * rs)
             a.scalar(4)

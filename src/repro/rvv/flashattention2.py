@@ -34,30 +34,37 @@ def _rot(i: int) -> int:
     return 1 + 3 * (i % 10)
 
 
-def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
-    assert seq % VL == 0 and d % VL == 0 and bc % VL == 0
-    g = common.rng(seed)
+def scratch_buffers(mm: MemoryMap, seq: int, d: int) -> dict:
+    """Online-softmax scratch shared by FA-2 and the multi-head kernel."""
+    return dict(
+        aS=mm.alloc("S", seq),          # score/prob row scratch
+        am=mm.alloc("m", VL),           # running max (all lanes)
+        amold=mm.alloc("mold", VL),     # previous running max
+        al=mm.alloc("l", VL),           # normaliser (all lanes)
+        asum=mm.alloc("psum", VL),      # block prob-sum scratch
+        aacc=mm.alloc("acc", d),        # output accumulator scratch
+        az=mm.alloc("zero", np.zeros(1, np.float32)),
+        an=mm.alloc("neginf", np.full(1, NEG, np.float32)),
+        ac=mm.alloc("clamp", np.full(1, common.EXP_CLAMP, np.float32)),
+    )
+
+
+def emit_attention(a: Assembler, bufs: dict, seq: int, d: int, bc: int,
+                   head_advs: dict | None = None) -> None:
+    """Emit one full FlashAttention-2 pass over ``seq`` query rows.
+
+    ``bufs`` holds the Q/KT/V/O base addresses plus the scratch from
+    :func:`scratch_buffers`.  ``head_advs`` (keys ``q``/``kt``/``v``/``o``)
+    appends one more per-level stride to every Q/KT/V/O access so an
+    enclosing head ``repeat`` advances the planes — the multi-head kernel's
+    fourth stride level.  With ``head_advs=None`` the emission is exactly
+    the single-head FA-2 trace.
+    """
+    aq, akt, av, ao = bufs["aq"], bufs["akt"], bufs["av"], bufs["ao"]
+    aS, am, amold = bufs["aS"], bufs["am"], bufs["amold"]
+    al, asum, aacc = bufs["al"], bufs["asum"], bufs["aacc"]
+    az, an, ac = bufs["az"], bufs["an"], bufs["ac"]
     scale = 1.0 / np.sqrt(d)
-    Q = (g.standard_normal((seq, d)) * 0.3).astype(np.float32)
-    K = (g.standard_normal((seq, d)) * 0.3).astype(np.float32)
-    V = g.standard_normal((seq, d)).astype(np.float32)
-
-    mm = MemoryMap()
-    aq = mm.alloc("Q", Q)
-    akt = mm.alloc("KT", np.ascontiguousarray(K.T))      # (d, seq)
-    av = mm.alloc("V", V)
-    ao = mm.alloc("O", seq * d)
-    aS = mm.alloc("S", seq)             # score/prob row scratch
-    am = mm.alloc("m", VL)              # running max (all lanes)
-    amold = mm.alloc("mold", VL)        # previous running max
-    al = mm.alloc("l", VL)              # normaliser (all lanes)
-    asum = mm.alloc("psum", VL)         # block prob-sum scratch
-    aacc = mm.alloc("acc", d)           # output accumulator scratch
-    az = mm.alloc("zero", np.zeros(1, np.float32))
-    an = mm.alloc("neginf", np.full(1, NEG, np.float32))
-    ac = mm.alloc("clamp", np.full(1, common.EXP_CLAMP, np.float32))
-
-    a = Assembler("flashattention2")
     dc = d // VL                               # output chunks per row
     n_blocks = (seq + bc - 1) // bc
     # The register rotation has period 10, so 10 consecutive query rows form
@@ -65,6 +72,12 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
     # advance as the outermost stride) so the trace carries fold metadata.
     group = 10 if seq % 10 == 0 else 1
     grp_adv = group * d * 4 if group > 1 else 0
+
+    def sfx(grp_stride, head_key):
+        """Outer stride levels beyond a Q/KT/V/O access's own loops: the
+        row-group advance (when grouped) then the head-plane advance."""
+        t = (grp_stride,) if group > 1 else ()
+        return t + ((head_advs[head_key],) if head_advs else ())
 
     def emit_row(i):
         # ---- row init: acc = 0, m = -inf, l = 0 (memory-resident state)
@@ -86,8 +99,10 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
             with a.repeat(bchunks):
                 a.vbcast(r0, az)
                 with a.repeat(d):
-                    a.vbcast(r1, aq + i * d * 4, stride=4, stride3=grp_adv)
-                    a.vle(r2, akt + j0 * 4, stride=seq * 4, stride2=32)
+                    a.vbcast(r1, aq + i * d * 4,
+                             strides=(4, 0) + sfx(grp_adv, "q"))
+                    a.vle(r2, akt + j0 * 4,
+                          strides=(seq * 4, 32) + sfx(0, "kt"))
                     a.vmacc(r0, r1, r2)
                 a.vmul_sc(r0, r0, scale)
                 a.vse(r0, aS + j0 * 4, stride=32)
@@ -139,7 +154,8 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
             with a.repeat(jn):
                 a.vbcast(v0, aS + j0 * 4, stride=4)       # p_j
                 with a.repeat(dc):
-                    a.vle(v1, av + j0 * d * 4, stride=32, stride2=d * 4)
+                    a.vle(v1, av + j0 * d * 4,
+                          strides=(32, d * 4) + sfx(0, "v"))
                     a.vle(v2, aacc, stride=32)
                     a.vmacc(v2, v0, v1)
                     a.vse(v2, aacc, stride=32)
@@ -151,7 +167,7 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
         with a.repeat(dc):
             a.vle(o0, aacc, stride=32)
             a.vdiv(o0, o0, o1)
-            a.vse(o0, ao + i * d * 4, stride=32, stride2=grp_adv)
+            a.vse(o0, ao + i * d * 4, strides=(32,) + sfx(grp_adv, "o"))
         a.scalar(3)
 
     if group > 1:
@@ -161,9 +177,14 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
     else:
         for i in range(seq):
             emit_row(i)
-    prog = a.finalize(mm)
 
-    # ---------------- f64 mirror (same blocking + same exp approx) --------
+
+def reference_attention(Q, K, V, bc: int) -> np.ndarray:
+    """f64 mirror of :func:`emit_attention`: same blocking, same exp
+    approximation, same association order."""
+    seq, d = Q.shape
+    scale = 1.0 / np.sqrt(d)
+    n_blocks = (seq + bc - 1) // bc
     Qd, Kd, Vd = (x.astype(np.float64) for x in (Q, K, V))
     O = np.zeros((seq, d))
     for i in range(seq):
@@ -180,6 +201,30 @@ def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
             acc = acc * corr + p @ Vd[j0:j0 + jn]
             m = m_new
         O[i] = acc / l
+    return O
+
+
+def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
+    assert seq % VL == 0 and d % VL == 0 and bc % VL == 0
+    g = common.rng(seed)
+    Q = (g.standard_normal((seq, d)) * 0.3).astype(np.float32)
+    K = (g.standard_normal((seq, d)) * 0.3).astype(np.float32)
+    V = g.standard_normal((seq, d)).astype(np.float32)
+
+    mm = MemoryMap()
+    bufs = dict(
+        aq=mm.alloc("Q", Q),
+        akt=mm.alloc("KT", np.ascontiguousarray(K.T)),   # (d, seq)
+        av=mm.alloc("V", V),
+        ao=mm.alloc("O", seq * d),
+    )
+    bufs.update(scratch_buffers(mm, seq, d))
+
+    a = Assembler("flashattention2")
+    emit_attention(a, bufs, seq, d, bc)
+    prog = a.finalize(mm)
+
+    O = reference_attention(Q, K, V, bc)
     return common.Built(prog, {"O": O.astype(np.float32)},
                         rtol=5e-3, atol=1e-4)
 

@@ -3,6 +3,13 @@
 Per time step: force accumulation over the 6 grid neighbours (spring model
 with sqrt-normalised direction, like RiVEC's somier), then velocity/position
 integration.  Vectorised along z.
+
+Folding stays honestly *uncertified* for this kernel: its steady state
+spans a whole time step (force + integrate share the pos/vel/frc arrays at
+different line rates, so cross-period reuse gaps inside the i-row loops are
+non-stationary), and with only 2 paper-size steps the step-level period
+detector never sees the >= 4 repetitions it needs to detect a stable
+super-period — there is nothing to extrapolate.  See docs/folding.md.
 """
 
 from __future__ import annotations

@@ -1,0 +1,38 @@
+"""Docs stay executable: the README quickstart block and
+examples/quickstart.py must run against the current API.
+
+`make docs-check` runs exactly this file; it also rides the fast tier so a
+PR that breaks a documented snippet fails the tier-1 gate.
+"""
+
+import pathlib
+import re
+import runpy
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _python_blocks(md_path):
+    text = md_path.read_text()
+    return re.findall(r"```python\n(.*?)```", text, flags=re.DOTALL)
+
+
+def test_readme_exists_with_quickstart():
+    blocks = _python_blocks(ROOT / "README.md")
+    assert blocks, "README.md lost its ```python quickstart block"
+
+
+def test_readme_quickstart_block_executes():
+    for block in _python_blocks(ROOT / "README.md"):
+        exec(compile(block, "README.md", "exec"), {})
+
+
+def test_docs_pages_exist():
+    for page in ("architecture.md", "folding.md"):
+        text = (ROOT / "docs" / page).read_text()
+        assert len(text) > 500, page
+
+
+def test_examples_quickstart_runs():
+    runpy.run_path(str(ROOT / "examples" / "quickstart.py"),
+                   run_name="__main__")

@@ -18,7 +18,7 @@ except Exception:                                     # pragma: no cover
 
 from repro.core import folding, isa, simulator
 from repro.core.trace import Assembler, MemoryMap
-from repro.rvv import dropout, gemv, jacobi2d, somier
+from repro.rvv import conv2d_batched, dropout, gemv, jacobi2d, mha, somier
 
 
 def _stream_program(iters=2048):
@@ -35,10 +35,11 @@ def _stream_program(iters=2048):
     return a.finalize(mm)
 
 
-def _assert_fold_exact(program, caps=(3, 8, 32)):
+def _assert_fold_exact(program, caps=(3, 8, 32),
+                       machine=simulator.DEFAULT_MACHINE):
     sweep = simulator.SweepConfig.make(list(caps))
-    full = simulator.simulate_sweep(program, sweep)
-    fold = simulator.simulate_sweep(program, sweep, fold=True)
+    full = simulator.simulate_sweep(program, sweep, machine)
+    fold = simulator.simulate_sweep(program, sweep, machine, fold=True)
     assert fold["fold_exact"].all()
     for k in simulator.COUNTER_NAMES:
         np.testing.assert_array_equal(full[k], fold[k], err_msg=k)
@@ -176,19 +177,94 @@ if HAVE_HYP:                                          # pragma: no cover
 
 
 # ---------------------------------------------------------------------------
+# State-snapshot super-period detection (multi-iteration steady states).
+# ---------------------------------------------------------------------------
+
+
+def test_super_period_detection_ping_pong():
+    """jacobi2d's ping-pong time loop is periodic with period TWO steps —
+    a loop the Assembler never emitted as one repeat.  The detector must
+    find the k = 2 super-period spanning the per-step row-loop blocks."""
+    p = jacobi2d.build(n=16, steps=8).program
+    sup = folding.detect_super_periods(p)
+    assert len(sup) == 1
+    nd = sup[0]
+    assert nd.cnt == 4                       # 8 steps / k=2 per period
+    assert nd.bl * nd.cnt == p.num_instructions
+    assert nd.warm >= 1
+
+
+def test_fold_exact_jacobi2d_ping_pong():
+    """The certified ping-pong fold must be bit-identical to the unfolded
+    run at every (capacity, policy, machine) grid point."""
+    from repro.core import policies
+    p = jacobi2d.build(n=32, steps=8).program
+    plan = folding.plan(p)
+    assert plan is not None and plan.certifiable
+    assert plan.num_super_periods == 1
+    sweep = simulator.SweepConfig.product(
+        [3, 8, 32], [policies.FIFO, policies.LRU])
+    machines = simulator.MachineSweep.make((1, 10))
+    full = simulator.simulate_sweep(p, sweep, machines)
+    fold = simulator.simulate_sweep(p, sweep, machines, fold=True)
+    assert fold["fold_exact"].all()
+    for k in simulator.COUNTER_NAMES:
+        np.testing.assert_array_equal(full[k], fold[k], err_msg=k)
+
+
+@pytest.mark.slow
+def test_fold_exact_jacobi2d_paper():
+    """Paper size: the exact-outer ping-pong plan extrapolates the 10-step
+    run bit-identically."""
+    _assert_fold_exact(jacobi2d.build(**jacobi2d.PAPER).program,
+                       caps=(3, 8))
+
+
+def test_fold_exact_deep_nest_kernels():
+    """The new 4-level-stride kernels certify their outermost (batch /
+    head) loop exact: way-span-padded planes make consecutive iterations
+    set-congruent, and the fold is bit-identical to the unfolded run.  (A
+    4 KB L1 keeps the warm-up short enough for the small builds to fold.)
+    """
+    small_l1 = simulator.MachineParams(l1_sets=64)
+    for mod, kw in ((conv2d_batched, dict(n=16, f=3, batch=8, cin=2)),
+                    (mha, dict(seq=16, d=16, bc=16, heads=8))):
+        p = mod.build(**kw).program
+        plan = folding.plan(p, warm_lines=folding.warm_lines_for(64, 2))
+        assert plan is not None and plan.certifiable, mod.__name__
+        _assert_fold_exact(p, caps=(3, 8), machine=small_l1)
+
+
+def test_exact_outer_replan_is_flagged():
+    """jacobi2d paper size: the nested plan cannot certify (inner row-loop
+    folds drop lines the next step reuses), so plan() must fall back to the
+    certified exact-outer plan."""
+    plan = folding.plan(jacobi2d.build(**jacobi2d.PAPER).program)
+    assert plan.certifiable and plan.exact_outer
+    assert plan.num_super_periods == 1
+    assert plan.kept_fraction < 0.7          # warm + A + B of 5 periods
+
+
+# ---------------------------------------------------------------------------
 # Regression pin: fold_exact truth per kernel must not silently flip.
 # ---------------------------------------------------------------------------
 
 # Paper-size certification status (at capacity 8, the paper's design point).
-# dropout/gemv stream steadily and certify exact; jacobi2d's ping-pong
-# steps and somier's force phases defeat the period detector, so their
-# folds must stay HONESTLY flagged inexact until a state-snapshot pass
-# (ROADMAP) makes them exact — a folding change that flips any of these
-# silently is a certification bug.
+# dropout/gemv stream steadily and certify exact; jacobi2d's ping-pong time
+# loop certifies through the state-snapshot super-period detector (k = 2
+# steps, exact-outer plan); conv2d_batched/mha certify their set-congruent
+# batch/head loops.  somier stays HONESTLY inexact: its steady state spans
+# a whole time step (force + integrate share arrays at different line
+# rates, non-stationary reuse gaps) and the paper's 2 steps never give the
+# step-level detector the >= 4 periods it needs.  A folding change that
+# flips any of these silently is a certification bug.  This table is
+# mirrored in docs/folding.md — keep both in sync.
 FOLD_EXACT_TRUTH = {
+    conv2d_batched: True,
     dropout: True,
     gemv: True,
-    jacobi2d: False,
+    jacobi2d: True,
+    mha: True,
     somier: False,
 }
 

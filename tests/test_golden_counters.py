@@ -8,11 +8,12 @@ refactor is behaviour-preserving on unfolded traces).
 
 Part 2 runs EVERY ``rvv/`` kernel (reduced size) through both the fused
 jax engine and the numpy reference interpreter at three (capacity, policy,
-machine) grid points and asserts bit-identical dispersion counters.  The
-machine latencies are traced sweep axes, so this doubles as the check that
-latency parameters never leak into a replacement decision: the
-interpreter has no timing model at all, yet must agree at every machine
-point.
+machine) grid points — one per replacement policy FIFO / LRU / OPT (the
+OPT row needs the interpreter's Belady ``next_use`` pre-pass) — and
+asserts bit-identical dispersion counters.  The machine latencies are
+traced sweep axes, so this doubles as the check that latency parameters
+never leak into a replacement decision: the interpreter has no timing
+model at all, yet must agree at every machine point.
 """
 
 import numpy as np
@@ -83,15 +84,18 @@ def test_golden_counters(name, cap, policy):
 # Differential conformance: fused engine vs numpy interpreter, every kernel.
 # ---------------------------------------------------------------------------
 
-# Three (capacity, policy, machine) grid points.  The machines share one L1
-# geometry (l1_sets/l1_ways are static engine parameters); their latency
-# fields span the traced axes.
+# Three (capacity, policy, machine) grid points spanning FIFO, LRU and OPT.
+# The machines share one L1 geometry (l1_sets/l1_ways are static engine
+# parameters); their latency fields span the traced axes.  OPT conformance
+# relies on the interpreter's Belady pre-pass (events.next_use_grid): both
+# engines compare the identical farthest-next-use metric in the same
+# (T, 3) slot-grid index space.
 CONF_POINTS = (
     (3, policies.FIFO, simulator.MachineParams(mem_latency=1)),
     (4, policies.LRU, simulator.MachineParams(mem_latency=10,
                                               uop_hit_cycles=2)),
-    (8, policies.FIFO, simulator.MachineParams(mem_latency=5,
-                                               l1_hit_cycles=1)),
+    (8, policies.OPT, simulator.MachineParams(mem_latency=5,
+                                              l1_hit_cycles=1)),
 )
 
 # Counters both engines define: the interpreter moves real data and has no
