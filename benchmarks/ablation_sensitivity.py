@@ -7,26 +7,25 @@ If dispersion relied on a fast memory system, slow memories would break it;
 the result shows the conclusion is latency-robust because spill/fill
 traffic is tiny and L1-resident.
 
-Machine grid shape: the memory latencies are *traced* machine axes
-(``simulator.MachineSweep``), so each L1 geometry's whole latency grid is
-ONE ``sweep_grid`` call — the machine axis rides inside the vmapped grid
-(one XLA dispatch per program on CPU, ``batch_programs=True`` for literally
-one; either way ONE compile per program-shape bucket, where the old static
-``MachineParams`` recompiled per latency point).  The per-point affine
-cross-check (``costmodel.check_machine_affine``) certifies the traced grid
-against the analytic machine model on every run.
+Sweep shape: ONE declarative ``repro.api.Sweep`` covers the whole study —
+``l1_geometry`` is a first-class axis, so the static L1 capacities that
+used to need a hand-rolled outer loop are planned by the Session (one
+engine build per geometry), while the memory latencies ride the traced
+machine axes inside each dispatch (zero recompiles across latency values).
+The per-point affine cross-check (``costmodel.check_machine_affine``)
+certifies the traced grid against the analytic machine model on every run.
 """
 
 from __future__ import annotations
 
-import time
-
 from benchmarks import common
+from repro import api
 from repro.core import costmodel, simulator
 
 APPS = ("pathfinder", "gemv", "dropout", "flashattention2")
 MEM_LATENCIES = (1, 3, 5, 10)
 L1_KBYTES = (4, 16)
+GEOMETRIES = tuple(api.L1Geometry.from_kbytes(kb) for kb in L1_KBYTES)
 
 
 def machine_grid(l1_kb: int) -> simulator.MachineSweep:
@@ -35,27 +34,36 @@ def machine_grid(l1_kb: int) -> simulator.MachineSweep:
         MEM_LATENCIES, l1_sets=l1_kb * 1024 // 32 // 2)
 
 
-def run(max_events=None, fold=True, check_affine=True) -> list[dict]:
+def run(max_events=None, fold=True, check_affine=True,
+        session=None) -> list[dict]:
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=APPS, capacity=[8, 32],
+                           mem_latency=MEM_LATENCIES,
+                           l1_geometry=GEOMETRIES,
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / (len(APPS) * len(MEM_LATENCIES) * len(L1_KBYTES))
+    if check_affine:
+        for l1_kb in L1_KBYTES:
+            costmodel.check_machine_affine(
+                res.to_grid(l1_geometry=api.L1Geometry.from_kbytes(l1_kb)),
+                machine_grid(l1_kb))
     rows = []
-    sweep = simulator.SweepConfig.make([8, 32])
     for l1_kb in L1_KBYTES:
-        machines = machine_grid(l1_kb)
-        t0 = time.time()
-        out = common.sweep_grid(APPS, sweep, fold=fold,
-                                max_events=max_events, machine=machines)
-        us_each = (time.time() - t0) * 1e6 / (len(APPS) * len(machines))
-        if check_affine:
-            costmodel.check_machine_affine(out, machines)
-        for mi, mem_lat in enumerate(MEM_LATENCIES):
-            for pi, name in enumerate(APPS):
+        geo = api.L1Geometry.from_kbytes(l1_kb)
+        for mem_lat in MEM_LATENCIES:
+            for name in APPS:
+                pt = dict(kernel=name, mem_latency=mem_lat, l1_geometry=geo)
                 rows.append(dict(
                     name=f"{name}_mem{mem_lat}_l1_{l1_kb}k",
                     kernel=name, mem_latency=mem_lat, l1_kb=l1_kb,
                     us_per_call=round(us_each, 1),
-                    cycles=int(out["cycles"][pi, 0, mi]),
-                    perf_cvrf8=round(float(out["cycles"][pi, 1, mi])
-                                     / float(out["cycles"][pi, 0, mi]), 4),
-                    hit_rate=round(float(out["hit_rate"][pi, 0, mi]), 4),
+                    cycles=res.value("cycles", capacity=8, **pt),
+                    perf_cvrf8=round(res.value("cycles", capacity=32, **pt)
+                                     / res.value("cycles", capacity=8, **pt),
+                                     4),
+                    hit_rate=round(res.value("hit_rate", capacity=8, **pt),
+                                   4),
                 ))
     return rows
 

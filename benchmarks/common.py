@@ -1,93 +1,58 @@
-"""Shared benchmark utilities: the two-level sweep cache and CSV emission.
+"""Shared benchmark utilities — now a thin shim over the process-default
+:class:`repro.api.Session`.
 
-Level 1 — *trace preparation* keyed by trace identity ``(name, fold,
-max_events, warm_lines)``: building a benchmark, expanding it to
-per-instruction event matrices and computing its periodic fold plan happens
-once per process, no matter how many suites sweep it.  ``warm_lines`` (the
-fold warm-up, a function of the static L1 geometry only) is part of the key
-because suites sweeping different L1 sizes fold differently; the traced
-latency axes never are.
-
-Level 2 — *compiled executables* keyed by padded shape: the fused engine
-pads every prepared trace to a power-of-two bucket and traces the
-per-program ``spill_line0`` plus the whole (capacity, policy, machine)
-config grid, so ``jax.jit``'s cache (one entry per (bucket, grid-size,
-L1-geometry) signature) is shared across programs, suites and machine
-points instead of recompiling per benchmark — or per machine — as the
-per-event engine did.
+The two-level sweep cache this module used to own (module-global ``_BUILT``
+/ ``_PREPARED`` dicts) lives in the Session now: trace preparation is keyed
+by (name, params, fold, max_events, fold warm-up — a function of the static
+L1 geometry only), and compiled executables live in XLA's jit cache, one
+entry per (shape bucket, L1 geometry) signature.  Suites that still sweep
+through this module share the default Session's caches; new code should
+construct a :class:`repro.api.Sweep` and call ``Session.run`` directly.
 """
 
 from __future__ import annotations
 
 import time
+import warnings
 
-from repro.core import folding, simulator
+from repro import api
+from repro.core import simulator
 
-_BUILT = {}
-_PREPARED = {}
+# The refine budget lives on the Session now: tune it via
+# api.default_session().refine_max_rows (or a Session of your own).
 
 
 def built(name):
     """Build (and cache) a paper-size benchmark trace."""
-    from repro import rvv
-    if name not in _BUILT:
-        b = rvv.BENCHMARKS[name]
-        _BUILT[name] = b.build(**b.paper_params)
-    return _BUILT[name]
+    return api.default_session().built(name)
 
 
 def prepared_for(name, fold=True, max_events=None,
                  machine=simulator.DEFAULT_MACHINE) -> simulator.PreparedTrace:
-    """Level-1 cache: expanded (+folded/truncated) trace per benchmark."""
+    """Prepared (expanded + folded) trace per benchmark, session-cached.
+
+    ``max_events`` truncation is deprecated here: declare the budget on a
+    :class:`repro.api.Sweep` (``Sweep(max_events=...)``) instead.
+    """
     if max_events is not None:
-        fold = False                      # truncation is the legacy mode
-    warm = folding.warm_lines_for(machine.l1_sets, machine.l1_ways)
-    key = (name, fold, max_events, warm)
-    if key not in _PREPARED:
-        _PREPARED[key] = simulator.prepare(
-            built(name).program, fold=fold, max_events=max_events,
-            warm_lines=warm)
-    return _PREPARED[key]
-
-
-# A folded trace whose steadiness check fails is re-simulated in full when
-# the full trace is affordable; bigger traces keep the (flagged) fold.
-# Certified exact-outer plans (docs/folding.md) make this pass rarer: a
-# kernel whose nested plan could not certify (jacobi2d's ping-pong, the
-# batched/multi-head outer loops) now extrapolates exactly instead of
-# re-running unfolded.
-REFINE_MAX_ROWS = 400_000
+        warnings.warn(
+            "prepared_for(max_events=...) is deprecated; pass max_events to "
+            "a repro.api.Sweep (or Session.prepared) instead",
+            DeprecationWarning, stacklevel=2)
+    return api.default_session().prepared(name, fold=fold,
+                                          max_events=max_events,
+                                          machine=machine)
 
 
 def sweep_grid(names, sweep, fold=True, max_events=None, refine=True,
                machine=simulator.DEFAULT_MACHINE):
     """One sweep call for a whole suite: P programs x C configs — and, when
     ``machine`` is a :class:`simulator.MachineSweep`, x M machine points in
-    the same dispatch (counter arrays gain a trailing machine axis).
-
-    With ``refine`` (default), any program whose fold was not certified
-    exact (``fold_exact`` False, at any grid point) and whose full trace
-    has at most ``REFINE_MAX_ROWS`` instructions is transparently
-    re-simulated without folding, so the suite is exact wherever exactness
-    is affordable and honestly flagged where it is not.
-    """
-    names = list(names)
-    preps = [prepared_for(n, fold=fold, max_events=max_events,
-                          machine=machine)
-             for n in names]
-    out = simulator.simulate_grid(preps, sweep, machine)
-    if fold and refine and "fold_exact" in out:
-        for pi, name in enumerate(names):
-            if out["fold_exact"][pi].all():
-                continue
-            if built(name).program.num_instructions > REFINE_MAX_ROWS:
-                continue
-            sub = simulator.simulate_grid(
-                [prepared_for(name, fold=False, machine=machine)],
-                sweep, machine)
-            for k in out:
-                out[k][pi] = sub[k][0] if k != "fold_exact" else True
-    return out
+    the same dispatch.  Delegates to ``Session.grid`` on the process-default
+    session (which owns the caches and the fold/refine policy)."""
+    return api.default_session().grid(names, sweep, machine=machine,
+                                      fold=fold, max_events=max_events,
+                                      refine=refine)
 
 
 def emit(rows: list[dict], header: list[str]) -> None:

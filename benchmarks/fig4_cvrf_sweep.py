@@ -1,39 +1,38 @@
 """Fig 4: (a) performance of cVRF sizes 3..16 normalised to the full VRF and
 (b) cVRF hit rates, for every benchmark application (FIFO, as the paper).
 
-One sweep-grid call: all applications x all capacities in one engine
-dispatch per shape bucket (folded traces, exact for steady-state kernels).
+One declarative sweep: all applications x all capacities through
+``repro.api`` — the Session plans one fused engine call per program-shape
+bucket (folded traces, exact for steady-state kernels).
 """
 
 from __future__ import annotations
 
-import time
-
 from benchmarks import common
-from repro import rvv
-from repro.core import simulator
+from repro import api, rvv
 
 CAPS = list(range(3, 17))
 
 
-def run(names=None, max_events=None, fold=True) -> list[dict]:
+def run(names=None, max_events=None, fold=True, session=None) -> list[dict]:
     names = list(names or rvv.BENCHMARKS)
-    sweep = simulator.SweepConfig.make(CAPS + [32])
-    t0 = time.time()
-    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
-    us_each = (time.time() - t0) * 1e6 / len(names)
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=names, capacity=CAPS + [32],
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / len(names)
     rows = []
-    for pi, name in enumerate(names):
-        full = float(out["cycles"][pi, -1])
-        exact = out.get("fold_exact")
-        for ci, cap in enumerate(CAPS):
+    for name in names:
+        full = res.value("cycles", kernel=name, capacity=32)
+        for cap in CAPS:
+            pt = dict(kernel=name, capacity=cap)
             rows.append(dict(
                 name=name, us_per_call=round(us_each, 1), capacity=cap,
-                norm_perf=round(full / float(out["cycles"][pi, ci]), 4),
-                hit_rate=round(float(out["hit_rate"][pi, ci]), 4),
-                spills=int(out["spills"][pi, ci]),
-                fills=int(out["fills"][pi, ci]),
-                fold_exact=bool(exact[pi, ci]) if exact is not None else True,
+                norm_perf=round(full / res.value("cycles", **pt), 4),
+                hit_rate=round(res.value("hit_rate", **pt), 4),
+                spills=res.value("spills", **pt),
+                fills=res.value("fills", **pt),
+                fold_exact=res.value("fold_exact", **pt),
             ))
     return rows
 

@@ -4,11 +4,8 @@ only 3 despite touching all 32 architectural registers."""
 
 from __future__ import annotations
 
-import time
-
 from benchmarks import common
-from repro import rvv
-from repro.core import simulator
+from repro import api, rvv
 
 PAPER_MIN = {  # read off the paper's Fig 5
     "pathfinder": 6, "jacobi2d": 7, "somier": 8, "gemv": 5, "dropout": 3,
@@ -19,22 +16,24 @@ PAPER_MIN = {  # read off the paper's Fig 5
 CAPS = list(range(3, 17))
 
 
-def run(max_events=None, fold=True, target=0.95, names=None) -> list[dict]:
+def run(max_events=None, fold=True, target=0.95, names=None,
+        session=None) -> list[dict]:
     names = list(names or rvv.BENCHMARKS)
-    sweep = simulator.SweepConfig.make(CAPS + [32])
-    t0 = time.time()
-    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
-    us_each = (time.time() - t0) * 1e6 / len(names)
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=names, capacity=CAPS + [32],
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / len(names)
     rows = []
-    for pi, name in enumerate(names):
-        hit = {c: float(out["hit_rate"][pi, ci])
-               for ci, c in enumerate(CAPS)}
+    for name in names:
+        hit = {c: res.value("hit_rate", kernel=name, capacity=c)
+               for c in CAPS}
         ok = [c for c in CAPS if hit[c] > target]
         min_regs = min(ok) if ok else max(CAPS) + 1
         rows.append(dict(
             name=name, us_per_call=round(us_each, 1),
             min_regs=min_regs, paper_min=PAPER_MIN.get(name, ""),
-            active_regs=len(common.built(name).program.active_vregs()),
+            active_regs=len(ses.built(name).program.active_vregs()),
             hit_at_min=round(hit.get(min_regs, 0.0), 4),
         ))
     return rows

@@ -11,11 +11,8 @@ results are normalised to the full-size 32 x 256-bit VRF.
 
 from __future__ import annotations
 
-import time
-
 from benchmarks import common
-from repro import rvv
-from repro.core import simulator
+from repro import api, rvv
 
 
 def narrow_cycles(full: dict) -> float:
@@ -29,17 +26,19 @@ def narrow_cycles(full: dict) -> float:
     return 4.0 * compute_cycles + (naccess - l1_miss) * 1 + l1_miss * (1 + 5)
 
 
-def run(max_events=None, fold=True, names=None) -> list[dict]:
+def run(max_events=None, fold=True, names=None, session=None) -> list[dict]:
     names = list(names or rvv.BENCHMARKS)
-    sweep = simulator.SweepConfig.make([8, 32])
-    t0 = time.time()
-    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
-    us_each = (time.time() - t0) * 1e6 / len(names)
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=names, capacity=[8, 32],
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / len(names)
     rows = []
-    for pi, name in enumerate(names):
-        cvrf8 = float(out["cycles"][pi, 0])
-        full = float(out["cycles"][pi, 1])
-        narrow = narrow_cycles({k: v[pi, 1] for k, v in out.items()})
+    for name in names:
+        cvrf8 = float(res.value("cycles", kernel=name, capacity=8))
+        full = float(res.value("cycles", kernel=name, capacity=32))
+        narrow = narrow_cycles({k: res.value(k, kernel=name, capacity=32)
+                                for k in res.keys()})
         rows.append(dict(
             name=name, us_per_call=round(us_each, 1),
             dispersion_8x256=round(full / cvrf8, 3),

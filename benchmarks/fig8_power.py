@@ -4,25 +4,25 @@ average CPU+VPU power saving."""
 
 from __future__ import annotations
 
-import time
-
 from benchmarks import common
-from repro import rvv
-from repro.core import costmodel, simulator
+from repro import api, rvv
+from repro.core import costmodel
 
 
-def run(max_events=None, fold=True, names=None) -> list[dict]:
+def run(max_events=None, fold=True, names=None, session=None) -> list[dict]:
     names = list(names or rvv.BENCHMARKS)
-    sweep = simulator.SweepConfig.make([8, 32])
-    t00 = time.time()
-    grid = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
-    us_each = (time.time() - t00) * 1e6 / len(names)
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=names, capacity=[8, 32],
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / len(names)
     rows = []
     savings = []
-    for pi, name in enumerate(names):
-        out = {k: v[pi] for k, v in grid.items()}
-        c8 = {k: float(v[0]) for k, v in out.items()}
-        c32 = {k: float(v[1]) for k, v in out.items()}
+    for name in names:
+        c8 = {k: float(res.value(k, kernel=name, capacity=8))
+              for k in res.keys()}
+        c32 = {k: float(res.value(k, kernel=name, capacity=32))
+               for k in res.keys()}
         p8 = costmodel.application_power(c8, 8, c8["cycles"], dispersed=True)
         p32 = costmodel.application_power(c32, 32, c32["cycles"])
         save = 100 * (1 - p8["total"] / p32["total"])

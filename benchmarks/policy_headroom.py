@@ -5,17 +5,16 @@ OPT upper-bounds any realizable policy; the FIFO->OPT gap quantifies what
 the paper's simplicity choice leaves on the table (§5 of EXPERIMENTS.md).
 
 The whole study — applications x capacities x policies x no-fetch — is one
-sweep-grid call on folded traces.
+declarative ``repro.api.Sweep`` on folded traces, using the zipped
+``config_points`` axis (the per-capacity FIFO+no-fetch extra column is not
+a cartesian product).
 """
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
 from benchmarks import common
-from repro.core import policies, simulator
+from repro import api
+from repro.core import policies
 
 CAPS = (4, 6, 8)
 APPS = ("pathfinder", "jacobi2d", "gemv", "somier", "conv2d_7x7",
@@ -23,32 +22,35 @@ APPS = ("pathfinder", "jacobi2d", "gemv", "somier", "conv2d_7x7",
 POLS = (policies.FIFO, policies.LRU, policies.LFU, policies.OPT)
 
 
-def run(max_events=None, fold=True) -> list[dict]:
-    # Config axis: every (cap, policy) plus FIFO+allocate-no-fetch per cap.
-    caps, pols, anfs = [], [], []
+def config_points() -> list[api.ConfigPoint]:
+    """Every (cap, policy) plus FIFO+allocate-no-fetch per capacity."""
+    pts = []
     for cap in CAPS:
-        for pol in POLS:
-            caps.append(cap), pols.append(pol), anfs.append(False)
-        caps.append(cap), pols.append(policies.FIFO), anfs.append(True)
-    sweep = simulator.SweepConfig(np.asarray(caps, np.int32),
-                                  np.asarray(pols, np.int32),
-                                  np.asarray(anfs, bool))
-    t0 = time.time()
-    out = common.sweep_grid(APPS, sweep, fold=fold, max_events=max_events)
-    us_each = (time.time() - t0) * 1e6 / len(APPS)
-    n_per_cap = len(POLS) + 1
+        pts.extend(api.ConfigPoint(cap, pol) for pol in POLS)
+        pts.append(api.ConfigPoint(cap, policies.FIFO, True))
+    return pts
+
+
+def run(max_events=None, fold=True, session=None) -> list[dict]:
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=APPS, config_points=config_points(),
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / len(APPS)
     rows = []
-    for pi, name in enumerate(APPS):
-        for ki, cap in enumerate(CAPS):
-            base = ki * n_per_cap
+    for name in APPS:
+        for cap in CAPS:
             row = dict(name=name, capacity=cap,
                        us_per_call=round(us_each, 1))
-            for li, pol in enumerate(POLS):
+            for pol in POLS:
                 row[policies.POLICY_NAMES[pol]] = round(
-                    float(out["hit_rate"][pi, base + li]), 4)
-            row["fifo_cycles"] = int(out["cycles"][pi, base])
-            row["fifo_no_fetch_cycles"] = int(
-                out["cycles"][pi, base + len(POLS)])
+                    res.value("hit_rate", kernel=name, capacity=cap,
+                              policy=pol, alloc_no_fetch=False), 4)
+            row["fifo_cycles"] = res.value(
+                "cycles", kernel=name, capacity=cap, policy=policies.FIFO,
+                alloc_no_fetch=False)
+            row["fifo_no_fetch_cycles"] = res.value(
+                "cycles", kernel=name, capacity=cap, alloc_no_fetch=True)
             rows.append(row)
     return rows
 

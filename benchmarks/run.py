@@ -5,10 +5,12 @@ studies).  Prints ``name,us_per_call,derived...`` CSV blocks per benchmark.
   python -m benchmarks.run table3 fig4           # subset
   python -m benchmarks.run --json BENCH_core.json fig4 table3
 
-``--json PATH`` additionally writes per-suite wall-clock, per-suite XLA
-compile counts (the fused engine compiles once per program-shape bucket —
-machine-latency grids are traced, so they add rows, not compiles) and
-per-kernel cycle counts (the perf trajectory record for this machine).
+``--json PATH`` writes a versioned report (``schema: 2``): per-suite
+wall-clock, XLA compile AND dispatch counts (the fused engine compiles once
+per (program-shape bucket, L1 geometry) — machine-latency grids are traced,
+so they add rows, not compiles), the sweep-axis metadata of every
+``repro.api`` sweep the suite ran, and per-kernel cycle counts (the perf
+trajectory record for this machine).
 """
 
 from __future__ import annotations
@@ -17,7 +19,10 @@ import json
 import sys
 import time
 
+from repro import api
 from repro.core import simulator
+
+SCHEMA_VERSION = 2
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -38,6 +43,14 @@ _CYCLE_KEYS = ("vec_cycles", "scalar_cycles", "fifo_cycles",
                "fifo_no_fetch_cycles", "cycles")
 
 
+def _sweep_meta(history_slice: list[dict]) -> list[dict]:
+    """Axis metadata for the suite's ``Session.run`` calls (JSON-safe)."""
+    return [dict(axes=h["axes"], points=h["points"],
+                 compiles=h["compiles"], dispatches=h["dispatches"],
+                 fold=h["fold"], kernel_params=h["kernel_params"])
+            for h in history_slice]
+
+
 def main(argv=None) -> int:
     args = list(argv if argv is not None else sys.argv[1:])
     json_path = None
@@ -54,20 +67,26 @@ def main(argv=None) -> int:
         print(f"error: unknown suite(s) {', '.join(unknown)}; "
               f"choose from: {', '.join(SUITES)}", file=sys.stderr)
         return 2
-    report = {"suites": {}, "kernels": {}}
+    session = api.default_session()
+    report = {"schema": SCHEMA_VERSION, "suites": {}, "kernels": {}}
     t00 = time.time()
     for suite in suites:
         mod = _MODULES[suite]
         print(f"\n## {suite} ({mod})", flush=True)
         t0 = time.time()
         c0 = simulator.compile_count()
+        d0 = simulator.dispatch_count()
+        h0 = len(session.history)
         rows = __import__(mod, fromlist=["main"]).main() or []
         dt = time.time() - t0
         print(f"## {suite} done in {dt:.1f}s", flush=True)
-        report["suites"][suite] = {"wall_s": round(dt, 2),
-                                   "rows": len(rows),
-                                   "compiles": simulator.compile_count()
-                                   - c0}
+        report["suites"][suite] = {
+            "wall_s": round(dt, 2),
+            "rows": len(rows),
+            "compiles": simulator.compile_count() - c0,
+            "dispatches": simulator.dispatch_count() - d0,
+            "sweeps": _sweep_meta(session.history[h0:]),
+        }
         for r in rows:
             cyc = {k: r[k] for k in _CYCLE_KEYS if k in r}
             if cyc and isinstance(r.get("name"), str):
@@ -80,6 +99,7 @@ def main(argv=None) -> int:
     if json_path:
         report["total_wall_s"] = round(total, 2)
         report["total_compiles"] = simulator.compile_count()
+        report["total_dispatches"] = simulator.dispatch_count()
         with open(json_path, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         print(f"wrote {json_path}")

@@ -1,32 +1,31 @@
 """Table 3: VPU (full VRF) speedup over scalar execution, active vector
 registers, and VRF utilisation — side by side with the paper's numbers.
 
-All applications share one full-VRF sweep-grid call (folded traces: cycle
-totals are extrapolated exactly for steady-state kernels instead of the old
-scaled prefix).
+All applications share one declarative full-VRF sweep through ``repro.api``
+(folded traces: cycle totals are extrapolated exactly for steady-state
+kernels instead of the old scaled prefix).
 """
 
 from __future__ import annotations
 
-import time
-
 from benchmarks import common
-from repro import rvv
-from repro.core import isa, simulator
+from repro import api, rvv
+from repro.core import isa
 
 
-def run(max_events=None, fold=True, names=None) -> list[dict]:
+def run(max_events=None, fold=True, names=None, session=None) -> list[dict]:
     names = list(names or rvv.BENCHMARKS)
-    sweep = simulator.SweepConfig.make([isa.NUM_ARCH_VREGS])
-    t0 = time.time()
-    out = common.sweep_grid(names, sweep, fold=fold, max_events=max_events)
-    us_each = (time.time() - t0) * 1e6 / len(names)
+    ses = session or api.default_session()
+    res, dt = common.timed(
+        ses.run, api.Sweep(kernels=names, capacity=[isa.NUM_ARCH_VREGS],
+                           fold=fold, max_events=max_events))
+    us_each = dt * 1e6 / len(names)
     rows = []
-    for pi, name in enumerate(names):
-        b = rvv.BENCHMARKS[name]
-        built = common.built(name)
-        vec_cycles = float(out["cycles"][pi, 0]) * float(
-            out["event_scale"][pi, 0])
+    for name in names:
+        b = rvv.get_benchmark(name)
+        built = ses.built(name)
+        vec_cycles = (res.value("cycles", kernel=name)
+                      * res.value("event_scale", kernel=name))
         scal_cycles = b.scalar_cost(**b.paper_params).cycles()
         # Beyond-paper kernels (conv2d_batched, mha) have no Table 3 row.
         paper = rvv.PAPER_TABLE3.get(name, dict(speedup="", active_regs="",

@@ -1,20 +1,22 @@
 """Quickstart: the paper's Register Dispersion study in ~40 lines.
 
 Builds the GemV kernel, proves dispersion is semantics-preserving, sweeps
-cVRF sizes (Fig 4), finds the minimal working set (Fig 5), and prints the
-area/power verdict (Figs 2/8).
+cVRF sizes (Fig 4) through the declarative ``repro.api`` front door, finds
+the minimal working set (Fig 5), and prints the area/power verdict
+(Figs 2/8).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro import rvv
+from repro import api, rvv
 from repro.core import costmodel, interpreter, planner, policies, simulator
 
-# 1. Build a vectorised kernel as an RVV-lite trace (paper Table 2 sizes).
-bench = rvv.BENCHMARKS["gemv"]
-built = bench.build(m=128, k=256)
+# 1. One Session owns every cache (built kernels, prepared traces) and
+#    plans sweep execution; build a paper kernel at a custom size.
+session = api.Session()
+built = session.built("gemv", params=dict(m=128, k=256))
 prog = built.program
 print(f"gemv: {prog.num_instructions} instructions, "
       f"{len(prog.active_vregs())} active vector registers")
@@ -27,14 +29,16 @@ np.testing.assert_array_equal(full.memory, disp.memory)
 print(f"dispersed execution bit-identical "
       f"(hit rate {disp.vrf_hits / (disp.vrf_hits + disp.vrf_misses):.3f})")
 
-# 3. Fig 4: performance + hit rate vs cVRF size, one vmapped sweep.
+# 3. Fig 4: performance + hit rate vs cVRF size — one declarative sweep.
 caps = [3, 4, 5, 6, 7, 8, 16, 32]
-out = simulator.simulate_sweep(prog, simulator.SweepConfig.make(caps))
-full_cycles = out["cycles"][-1]
-for c, cyc, hr in zip(caps, out["cycles"], out["hit_rate"]):
+res = session.run(api.Sweep(kernels=["gemv"], capacity=caps,
+                            kernel_params=dict(m=128, k=256)))
+full_cycles = res.value("cycles", capacity=32)
+for c in caps:
+    cyc = res.value("cycles", capacity=c)
     bar = "#" * int(40 * full_cycles / cyc)
     print(f"  cVRF {c:2d}: perf {full_cycles / cyc:5.3f} "
-          f"hit {hr:5.3f} {bar}")
+          f"hit {res.value('hit_rate', capacity=c):5.3f} {bar}")
 
 # 4. Fig 5: smallest cVRF with >95% hit rate.
 plan = planner.min_registers_for_hit_rate(prog)

@@ -1,11 +1,16 @@
 """Register Dispersion core: the paper's contribution as composable modules.
 
+Sweeps are best driven through the declarative front door one layer up —
+``repro.api`` (Sweep / Session / SweepResult, see ``docs/api.md``); the
+modules here are the engine room it is built on.
+
 Public API:
   trace.Assembler / trace.MemoryMap / trace.Program   — RVV-lite trace eDSL
   interpreter.run / interpreter.run_dispersed          — functional oracles
-  simulator.simulate_sweep / simulate_one              — cycle-level cVRF model
-  simulator.prepare / simulate_grid                    — fused (P, C, M) grid
+  simulator.prepare / simulate_grid / simulate_one     — cycle-level cVRF model
   simulator.MachineSweep                               — traced machine axes
+  simulator.simulate_sweep                             — DEPRECATED shim
+                                                        (-> repro.api)
   folding.plan                                         — exact periodic folding
   policies.FIFO / LRU / LFU / OPT                      — replacement policies
   planner.min_registers_for_hit_rate / policy_headroom — working-set planning

@@ -39,12 +39,13 @@ def min_registers_for_hit_rate(
     ``program`` may be a Program, a pre-expanded EventStream, or a
     PreparedTrace (e.g. the benchmark layer's folded cache entry).
     """
-    prep = simulator.prepare(program, fold=fold, max_events=max_events)
+    prep = simulator.prepare(program, fold=fold, max_events=max_events,
+                             machine=machine)
     caps = list(capacities) + [32]
     sweep = simulator.SweepConfig.make(caps, policy)
-    out = simulator.simulate_sweep(prep, sweep, machine)
-    hit = {c: float(h) for c, h in zip(caps, out["hit_rate"])}
-    cyc = {c: int(x) for c, x in zip(caps, out["cycles"])}
+    out = simulator.simulate_grid([prep], sweep, machine)
+    hit = {c: float(h) for c, h in zip(caps, out["hit_rate"][0])}
+    cyc = {c: int(x) for c, x in zip(caps, out["cycles"][0])}
     ok = [c for c in capacities if hit[c] > target]
     active = (len(program.active_vregs())
               if isinstance(program, Program) else -1)
@@ -83,7 +84,8 @@ def normalized_performance(program: Program, capacities,
     (1.0 = no slowdown; <1.0 = dispersion stalls hurt)."""
     caps = list(capacities) + [32]
     sweep = simulator.SweepConfig.make(caps, policy)
-    out = simulator.simulate_sweep(program, sweep, max_events=max_events)
-    full = float(out["cycles"][-1])
+    prep = simulator.prepare(program, max_events=max_events)
+    out = simulator.simulate_grid([prep], sweep)
+    full = float(out["cycles"][0, -1])
     return {int(c): full / float(x)
-            for c, x in zip(caps[:-1], out["cycles"][:-1])}
+            for c, x in zip(caps[:-1], out["cycles"][0, :-1])}

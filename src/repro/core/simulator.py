@@ -326,6 +326,16 @@ def compile_count() -> int:
     return _COMPILES
 
 
+# Grid-engine dispatches (one `_run_grid` call each; a dispatch reuses a
+# compiled executable unless its static/shape signature is new).
+_DISPATCHES = 0
+
+
+def dispatch_count() -> int:
+    """Grid-engine XLA dispatches so far (compiled-or-cached alike)."""
+    return _DISPATCHES
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3),
                    donate_argnums=(4, 5))
 def _run_grid(l1_sets, l1_ways, slots_used, track_ab, arrays, spill0s,
@@ -512,6 +522,8 @@ def _dispatch_grid(machine: MachineSweep, slots_used, track_ab, arrays,
     """One `_run_grid` call with donation noise suppressed: the counter
     outputs are far smaller than the donated trace grid, so XLA may decline
     the alias and warn — harmless, the donation is an upper bound."""
+    global _DISPATCHES
+    _DISPATCHES += 1
     with warnings.catch_warnings():
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
@@ -591,13 +603,18 @@ def simulate_sweep(program_or_events, sweep: SweepConfig,
                    machine=DEFAULT_MACHINE,
                    max_events: int | None = None,
                    fold: bool = False) -> dict[str, np.ndarray]:
-    """Simulate one trace under C configurations (vmapped). Returns dict of
-    (C,)-shaped counter arrays — (C, M)-shaped when ``machine`` is a
-    :class:`MachineSweep` — plus derived metrics."""
-    prep = prepare(program_or_events, fold=fold, max_events=max_events,
-                   machine=machine)
-    out = simulate_grid([prep], sweep, machine)
-    return {k: v[0] for k, v in out.items()}
+    """Deprecated: use :func:`repro.api.sweep_program` (one raw program) or
+    a :class:`repro.api.Session` running a declarative ``Sweep`` (named
+    kernels).  This shim delegates to ``repro.api`` and returns the same
+    dict of (C,)-shaped — (C, M)-shaped under a :class:`MachineSweep` —
+    counter arrays the old entry point produced."""
+    warnings.warn(
+        "simulator.simulate_sweep is deprecated; use repro.api.sweep_program"
+        " (or Session.run with a declarative Sweep) instead",
+        DeprecationWarning, stacklevel=2)
+    from repro import api  # runtime import: api sits above the core layer
+    return api.sweep_program(program_or_events, sweep, machine=machine,
+                             fold=fold, max_events=max_events)
 
 
 def simulate_one(program, capacity, policy=policies.FIFO,
@@ -605,9 +622,11 @@ def simulate_one(program, capacity, policy=policies.FIFO,
                  machine=DEFAULT_MACHINE,
                  max_events: int | None = None,
                  fold: bool = False) -> dict[str, float]:
+    prep = prepare(program, fold=fold, max_events=max_events,
+                   machine=machine)
     sweep = SweepConfig.make([capacity], policy, alloc_no_fetch)
-    out = simulate_sweep(program, sweep, machine, max_events, fold=fold)
-    return {k: v[0] for k, v in out.items()}
+    out = simulate_grid([prep], sweep, machine)
+    return {k: v[0, 0] for k, v in out.items()}
 
 
 def full_vrf_baseline(program, machine: MachineParams = DEFAULT_MACHINE,

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+import sys
 from typing import Callable
 
 import numpy as np
@@ -39,6 +40,51 @@ class Benchmark:
     paper_params: dict
     reduced_params: dict
     table2: str = ""                   # the paper's Table 2 description
+
+
+class BenchmarkRegistry(dict):
+    """``name -> Benchmark`` map populated by :func:`register_benchmark`.
+
+    Unknown lookups raise with the sorted list of registered kernels, so a
+    typo'd sweep axis fails with the menu instead of a bare KeyError.
+    """
+
+    def __missing__(self, name):
+        raise KeyError(
+            f"unknown kernel {name!r}; available: "
+            f"{', '.join(sorted(self))}")
+
+
+BENCHMARKS: BenchmarkRegistry = BenchmarkRegistry()
+
+
+def register_benchmark(name: str, *, domain: str, paper_params: dict,
+                       reduced_params: dict, table2: str = "",
+                       scalar_cost: Callable[..., ScalarCost] | None = None):
+    """Decorator registering a kernel's ``build`` function as a Benchmark.
+
+    ``scalar_cost`` defaults to the decorated module's ``scalar_cost``
+    function, resolved lazily (kernel modules conventionally define it below
+    ``build``).  A module may stack the decorator to register several named
+    configurations of one build function (see ``rvv.gemm``).
+    """
+    def deco(build: Callable[..., Built]) -> Callable[..., Built]:
+        cost = scalar_cost
+        if cost is None:
+            mod = sys.modules[build.__module__]
+            cost = lambda **kw: mod.scalar_cost(**kw)  # noqa: E731
+        if name in BENCHMARKS:
+            raise ValueError(f"benchmark {name!r} registered twice")
+        BENCHMARKS[name] = Benchmark(name, domain, build, cost,
+                                     dict(paper_params), dict(reduced_params),
+                                     table2)
+        return build
+    return deco
+
+
+def get_benchmark(name: str) -> Benchmark:
+    """Registry lookup; unknown names raise with the available kernels."""
+    return BENCHMARKS[name]
 
 
 def rng(seed: int) -> np.random.Generator:

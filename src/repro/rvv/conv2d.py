@@ -45,6 +45,9 @@ def emit_taps(a: Assembler, ai: int, aw: int, fr: int, f: int, rs: int,
         a.vmacc(ACC1, IN1, W[fc])
 
 
+@common.register_benchmark(
+    "conv2d_7x7", domain="CNN", paper_params=PAPER, reduced_params=REDUCED,
+    table2="256 x 256 filter size:7")
 def build(n=256, f=7, seed=0) -> common.Built:
     g = common.rng(seed)
     img = g.standard_normal((n, n)).astype(np.float32)

@@ -37,6 +37,9 @@ def _plane_words(n: int) -> int:
     return -(-need // _WAY_SPAN_WORDS) * _WAY_SPAN_WORDS
 
 
+@common.register_benchmark(
+    "conv2d_batched", domain="CNN", paper_params=PAPER,
+    reduced_params=REDUCED, table2="32 x 32 x2ch x8imgs filter size:3")
 def build(n=32, f=3, batch=8, cin=2, seed=0) -> common.Built:
     g = common.rng(seed)
     out_n = n - f + 1

@@ -13,6 +13,9 @@ PAPER = dict(n=131072, scale=0.5)
 REDUCED = dict(n=512, scale=0.5)
 
 
+@common.register_benchmark(
+    "dropout", domain="ML", paper_params=PAPER, reduced_params=REDUCED,
+    table2="Vector Length:131072 Scale:0.5")
 def build(n=131072, scale=0.5, seed=0) -> common.Built:
     assert n % isa.VL_ELEMS == 0
     g = common.rng(seed)

@@ -204,6 +204,10 @@ def reference_attention(Q, K, V, bc: int) -> np.ndarray:
     return O
 
 
+@common.register_benchmark(
+    "flashattention2", domain="Transformer", paper_params=PAPER,
+    reduced_params=REDUCED,
+    table2="Seq. Length:200 Hidden Dim.:64 Block row:1 Block col:128")
 def build(seq=200, d=64, bc=128, seed=0) -> common.Built:
     assert seq % VL == 0 and d % VL == 0 and bc % VL == 0
     g = common.rng(seed)

@@ -24,6 +24,12 @@ REDUCED = dict(m=4, k=16, n=16)
 ACC, AR, BR, ZR = 1, 2, 3, 31
 
 
+@common.register_benchmark(
+    "resnet50_l10", domain="CNN", paper_params=RESNET,
+    reduced_params=REDUCED, table2="(128 x 256)x(256 x 784)")
+@common.register_benchmark(
+    "densenet121_l105", domain="CNN", paper_params=DENSENET,
+    reduced_params=REDUCED, table2="(32 x 1152)x(1152 x 64)")
 def build(m=32, k=1152, n=64, seed=0) -> common.Built:
     assert n % isa.VL_ELEMS == 0
     g = common.rng(seed)

@@ -15,6 +15,9 @@ REDUCED = dict(m=16, k=32)
 Z = 31     # register holding broadcast 0.0
 
 
+@common.register_benchmark(
+    "gemv", domain="NLP", paper_params=PAPER, reduced_params=REDUCED,
+    table2="(512 x 512) x 512")
 def build(m=512, k=512, seed=0) -> common.Built:
     assert k % isa.VL_ELEMS == 0 and m % 2 == 0
     g = common.rng(seed)

@@ -27,6 +27,9 @@ def _stride_words(n: int) -> int:
     return w
 
 
+@common.register_benchmark(
+    "jacobi2d", domain="Engineering", paper_params=PAPER,
+    reduced_params=REDUCED, table2="Problem size:128 steps:10")
 def build(n=128, steps=10, seed=0) -> common.Built:
     assert n % isa.VL_ELEMS == 0
     g = common.rng(seed)

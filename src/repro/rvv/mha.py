@@ -38,6 +38,9 @@ def _plane_words(seq: int, d: int) -> int:
     return -(-(seq * d) // _WAY_SPAN_WORDS) * _WAY_SPAN_WORDS
 
 
+@common.register_benchmark(
+    "mha", domain="Transformer", paper_params=PAPER, reduced_params=REDUCED,
+    table2="Seq:40 Head Dim.:16 Heads:8")
 def build(seq=40, d=16, bc=40, heads=8, seed=0) -> common.Built:
     assert seq % VL == 0 and d % VL == 0 and bc % VL == 0
     g = common.rng(seed)

@@ -20,6 +20,9 @@ def _padded(row: np.ndarray, width: int) -> np.ndarray:
     return buf
 
 
+@common.register_benchmark(
+    "pathfinder", domain="Grid Traversal", paper_params=PAPER,
+    reduced_params=REDUCED, table2="Rows:32 Columns:32")
 def build(rows=32, cols=32, seed=0) -> common.Built:
     assert cols % isa.VL_ELEMS == 0
     g = common.rng(seed)

@@ -44,6 +44,9 @@ def _zpad(n: int) -> int:
     return z
 
 
+@common.register_benchmark(
+    "somier", domain="Physics Simulation", paper_params=PAPER,
+    reduced_params=REDUCED, table2="Problem size:32 steps:2")
 def build(n=32, steps=2, seed=0) -> common.Built:
     assert n % isa.VL_ELEMS == 0
     g = common.rng(seed)

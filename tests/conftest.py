@@ -1,0 +1,20 @@
+"""Shared fixtures: process-default `repro.api` Session management.
+
+The default Session is deliberately long-lived (suites share its built /
+prepared caches), so tests that need isolation opt into
+``fresh_default_session`` instead of the whole suite paying a cache reset.
+"""
+
+import pytest
+
+from repro import api
+
+
+@pytest.fixture
+def fresh_default_session():
+    """A fresh process-default Session for one test; the previous default
+    (and every cache it holds) is restored afterwards."""
+    old = api._DEFAULT_SESSION
+    ses = api.reset_default_session()
+    yield ses
+    api._DEFAULT_SESSION = old

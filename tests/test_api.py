@@ -1,0 +1,251 @@
+"""The `repro.api` front door: declarative Sweeps, session-owned caches,
+the (bucket, geometry) execution planner, and the deprecation shims.
+
+The planner contract pinned here (in the spirit of
+``tests/test_machine_grid.py``):
+
+  1. *compile budget*: a 2-geometry x full-latency-grid sweep compiles the
+     engine exactly once per (program-shape bucket, L1 geometry), and an
+     identical re-run — even from a brand-new Session — compiles nothing;
+  2. *bit-identity*: grid points equal standalone ``simulate_one`` runs at
+     the matching ``MachineParams`` (spot-checked), and the whole
+     ablation-style grid equals the legacy per-geometry ``sweep_grid``
+     path, per-point ``fold_exact`` certificates included;
+  3. *isolation*: two Sessions share no Python state, and the process
+     default is resettable via the ``fresh_default_session`` fixture.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks import common
+from repro import api, rvv
+from repro.core import policies, simulator
+
+# Unique L1 geometries (3-way, unlike every other suite) so the jit cache
+# is provably cold for the compile-budget assertions, whatever ran first.
+GEOS = (api.L1Geometry(sets=48, ways=3), api.L1Geometry(sets=96, ways=3))
+
+SWEEP = api.Sweep(
+    kernels=("dropout", "gemv"), capacity=(4, 8),
+    mem_latency=(1, 5), uop_hit_cycles=(1, 2),
+    l1_geometry=GEOS, kernel_params="reduced")
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_kernel_raises_with_menu():
+    with pytest.raises(KeyError, match="unknown kernel 'nope'.*dropout"):
+        rvv.BENCHMARKS["nope"]
+    with pytest.raises(KeyError, match="available: conv2d_7x7"):
+        rvv.get_benchmark("nope")
+    with pytest.raises(KeyError, match="unknown kernel"):
+        api.Session().run(api.Sweep(kernels=["nope"]))
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="registered twice"):
+        rvv.register_benchmark(
+            "gemv", domain="x", paper_params={}, reduced_params={},
+            scalar_cost=lambda **kw: None)(lambda **kw: None)
+
+
+# ---------------------------------------------------------------------------
+# Session isolation.
+# ---------------------------------------------------------------------------
+
+
+def test_sessions_share_nothing():
+    s1, s2 = api.Session(), api.Session()
+    b1 = s1.built("dropout", params="reduced")
+    b2 = s2.built("dropout", params="reduced")
+    assert b1 is not b2                      # independent build caches
+    assert s1.built("dropout", params="reduced") is b1   # but each caches
+    p1 = s1.prepared("dropout", params="reduced")
+    assert s1.prepared("dropout", params="reduced") is p1
+    assert not s2._prepared                  # s2 never prepared anything
+    s1.reset()
+    assert not s1._built and not s1._prepared
+    assert s2.built("dropout", params="reduced") is b2   # s2 unaffected
+
+
+def test_default_session_resettable(fresh_default_session):
+    ses = fresh_default_session
+    assert api.default_session() is ses
+    assert not ses._built
+    b = ses.built("dropout", params="reduced")
+    assert ses._built
+    fresh = api.reset_default_session()
+    assert api.default_session() is fresh and fresh is not ses
+    assert not fresh._built
+    assert ses.built("dropout", params="reduced") is b   # old one intact
+
+
+# ---------------------------------------------------------------------------
+# The execution planner: compile budget + bit-identity + certificates.
+# ---------------------------------------------------------------------------
+
+
+def test_planner_compile_budget():
+    ses = api.Session(refine=False)
+    res = ses.run(SWEEP)
+    preps = {(n, geo): ses.prepared(n, machine=SWEEP.machine_sweep(geo),
+                                    params="reduced")
+             for n in SWEEP.kernels for geo in GEOS}
+    expected = {(geo, simulator._bucket(p.num_rows))
+                for (n, geo), p in preps.items()}
+    assert ses.compile_count() == len(expected), (
+        "the planner must compile exactly once per (shape bucket, L1 "
+        "geometry) — latency values and capacities are traced axes")
+    assert res.meta["compiles"] == len(expected)
+    assert len(res.meta["plan"]) == len(expected)
+
+    # An identical sweep — even from a brand-new Session — reuses every
+    # executable (the jit cache is keyed on shapes + static geometry only).
+    res2 = ses.run(SWEEP)
+    assert ses.compile_count() == len(expected)
+    fresh = api.Session(refine=False)
+    res3 = fresh.run(SWEEP)
+    assert fresh.compile_count() == 0
+    for k in simulator.COUNTER_NAMES:
+        np.testing.assert_array_equal(res[k], res2[k])
+        np.testing.assert_array_equal(res[k], res3[k])
+
+
+def test_planner_bit_identity_spot_checks():
+    ses = api.Session(refine=False)
+    res = ses.run(SWEEP)
+    assert res.shape == (2, 2, 1, 1, 2, 2, 1, 2)
+    points = [
+        dict(kernel="dropout", capacity=4, mem_latency=1, uop_hit_cycles=1,
+             l1_geometry=GEOS[0]),
+        dict(kernel="gemv", capacity=8, mem_latency=5, uop_hit_cycles=2,
+             l1_geometry=GEOS[1]),
+        dict(kernel="gemv", capacity=4, mem_latency=5, uop_hit_cycles=1,
+             l1_geometry=GEOS[0]),
+    ]
+    for pt in points:
+        geo = pt["l1_geometry"]
+        machine = simulator.MachineParams(
+            l1_sets=geo.sets, l1_ways=geo.ways,
+            mem_latency=pt["mem_latency"],
+            uop_hit_cycles=pt["uop_hit_cycles"])
+        one = simulator.simulate_one(
+            ses.built(pt["kernel"], params="reduced").program,
+            pt["capacity"], machine=machine, fold=True)
+        for k in simulator.COUNTER_NAMES:
+            assert res.value(k, **pt) == one[k], (k, pt)
+        # the fold-exactness certificate survives the planner per point
+        # (simulate_one omits the key when the trace has no folds at all)
+        assert res.value("fold_exact", **pt) == bool(
+            one.get("fold_exact", True))
+
+
+def test_geometry_axis_reproduces_ablation_grid():
+    """The acceptance pin: one Session.run with a 2-point l1_geometry axis
+    equals the legacy per-geometry sweep_grid path of the ablation suite,
+    bit-identical on every counter, fold_exact flags preserved."""
+    from benchmarks import ablation_sensitivity as ablation
+    ses = api.Session()
+    sweep = api.Sweep(kernels=ablation.APPS, capacity=(8, 32),
+                      mem_latency=ablation.MEM_LATENCIES,
+                      l1_geometry=ablation.GEOMETRIES, max_events=6_000)
+    res = ses.run(sweep)
+    cfg = simulator.SweepConfig.make([8, 32])
+    for l1_kb in ablation.L1_KBYTES:
+        geo = api.L1Geometry.from_kbytes(l1_kb)
+        machines = ablation.machine_grid(l1_kb)
+        legacy = ses.grid(ablation.APPS, cfg, machine=machines,
+                          max_events=6_000)
+        got = res.to_grid(l1_geometry=geo)
+        for k in legacy:
+            np.testing.assert_array_equal(
+                got[k], legacy[k], err_msg=f"{k} at l1={l1_kb}k")
+    assert bool(res["fold_exact"].all())     # truncated runs never fold
+
+
+# ---------------------------------------------------------------------------
+# SweepResult accessors.
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_result_accessors():
+    ses = api.Session(refine=False)
+    res = ses.run(SWEEP)
+    rows = res.to_rows()
+    assert len(rows) == np.prod(res.shape) == res.meta["points"]
+    r0 = rows[0]
+    assert r0["kernel"] == "dropout" and r0["policy_name"] == "fifo"
+    assert r0["l1_sets"] == 48 and r0["l1_ways"] == 3
+    assert isinstance(r0["cycles"], int)
+    sub = res.select(kernel="gemv", mem_latency=[1, 5])
+    assert sub.shape == (1, 2, 1, 1, 2, 2, 1, 2)
+    assert res.select(policy="fifo").shape == res.shape
+    assert res.select(capacity=(4, 8)).shape == res.shape  # tuple == multi
+    # ... except on the geometry axis, where a tuple is one (sets, ways)
+    assert res.select(l1_geometry=(48, 3)).shape[4] == 1
+    np.testing.assert_array_equal(
+        res.array("cycles", kernel="gemv", l1_geometry=GEOS[0]),
+        res["cycles"][1, :, 0, 0, 0].squeeze())
+    with pytest.raises(KeyError, match="unknown axis"):
+        res.select(not_an_axis=3)
+    with pytest.raises(ValueError, match="no point"):
+        res.select(capacity=99)
+    with pytest.raises(ValueError, match="pin every"):
+        res.value("cycles", kernel="gemv")
+    with pytest.raises(ValueError, match="single L1 geometry"):
+        res.to_grid()
+
+
+def test_config_points_zipped_axis():
+    pts = [api.ConfigPoint(4, policies.FIFO),
+           api.ConfigPoint(4, policies.LRU),
+           (4, policies.FIFO, True),
+           dict(capacity=8, policy="opt")]
+    ses = api.Session(refine=False)
+    res = ses.run(api.Sweep(kernels=["dropout"], config_points=pts,
+                            kernel_params="reduced"))
+    assert [a.name for a in res.axes][1] == "config"
+    assert res.shape[1] == 4
+    assert res.select(capacity=4).shape[1] == 3
+    assert res.select(policy="lru").shape[1] == 1
+    assert res.select(capacity=[4, 8]).shape[1] == 4     # field multi-select
+    assert res.select(policy=["fifo", "lru"]).shape[1] == 3
+    v = res.value("cycles", capacity=4, policy=policies.FIFO,
+                  alloc_no_fetch=True)
+    assert isinstance(v, int)
+    row = res.select(policy="opt").to_rows()[0]
+    assert row["capacity"] == 8 and row["policy_name"] == "opt"
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims.
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_simulate_sweep():
+    prog = api.Session().built("dropout", params="reduced").program
+    cfg = simulator.SweepConfig.make([4, 32])
+    with pytest.warns(DeprecationWarning, match="simulate_sweep"):
+        old = simulator.simulate_sweep(prog, cfg)
+    new = api.sweep_program(prog, cfg)
+    assert old.keys() == new.keys()
+    for k in old:
+        np.testing.assert_array_equal(old[k], new[k], err_msg=k)
+
+
+def test_deprecated_prepared_for_max_events(fresh_default_session):
+    with pytest.warns(DeprecationWarning, match="max_events"):
+        prep = common.prepared_for("dropout", max_events=500)
+    # delegates into the default session's cache ...
+    assert prep is fresh_default_session.prepared("dropout", max_events=500)
+    # ... and matches the old direct-prepare path bit for bit.
+    legacy = simulator.prepare(
+        common.built("dropout").program, fold=False, max_events=500)
+    assert prep.num_rows == legacy.num_rows
+    assert prep.event_scale == legacy.event_scale
+    np.testing.assert_array_equal(prep.ev.cost, legacy.ev.cost)
+    np.testing.assert_array_equal(prep.weight, legacy.weight)

@@ -28,7 +28,7 @@ def test_readme_quickstart_block_executes():
 
 
 def test_docs_pages_exist():
-    for page in ("architecture.md", "folding.md"):
+    for page in ("api.md", "architecture.md", "folding.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
 

@@ -16,6 +16,7 @@ try:
 except Exception:                                     # pragma: no cover
     HAVE_HYP = False
 
+from repro import api
 from repro.core import folding, isa, simulator
 from repro.core.trace import Assembler, MemoryMap
 from repro.rvv import conv2d_batched, dropout, gemv, jacobi2d, mha, somier
@@ -38,8 +39,8 @@ def _stream_program(iters=2048):
 def _assert_fold_exact(program, caps=(3, 8, 32),
                        machine=simulator.DEFAULT_MACHINE):
     sweep = simulator.SweepConfig.make(list(caps))
-    full = simulator.simulate_sweep(program, sweep, machine)
-    fold = simulator.simulate_sweep(program, sweep, machine, fold=True)
+    full = api.sweep_program(program, sweep, machine)
+    fold = api.sweep_program(program, sweep, machine, fold=True)
     assert fold["fold_exact"].all()
     for k in simulator.COUNTER_NAMES:
         np.testing.assert_array_equal(full[k], fold[k], err_msg=k)
@@ -80,8 +81,8 @@ def test_fold_flag_honest_on_non_steady_trace():
         a.vse(1, buf + 8192, stride=96)
     p = a.finalize(mm)
     sweep = simulator.SweepConfig.make([4])
-    fold = simulator.simulate_sweep(p, sweep, fold=True)
-    full = simulator.simulate_sweep(p, sweep)
+    fold = api.sweep_program(p, sweep, fold=True)
+    full = api.sweep_program(p, sweep)
     if "fold_exact" in fold and fold["fold_exact"].all():
         for k in simulator.COUNTER_NAMES:
             np.testing.assert_array_equal(full[k], fold[k], err_msg=k)
@@ -135,10 +136,10 @@ def _check_fold_exact_implies_equal(program, machines):
     algebraically extrapolated counters equal the full unfolded simulation
     — independently at every (capacity, machine) grid point."""
     sweep = simulator.SweepConfig.make([3, 8])
-    fold = simulator.simulate_sweep(program, sweep, machines, fold=True)
+    fold = api.sweep_program(program, sweep, machines, fold=True)
     if "fold_exact" not in fold:
         return                                    # nothing folded: vacuous
-    full = simulator.simulate_sweep(program, sweep, machines)
+    full = api.sweep_program(program, sweep, machines)
     exact = fold["fold_exact"]
     assert exact.shape == full["cycles"].shape
     for k in simulator.COUNTER_NAMES:
@@ -205,8 +206,8 @@ def test_fold_exact_jacobi2d_ping_pong():
     sweep = simulator.SweepConfig.product(
         [3, 8, 32], [policies.FIFO, policies.LRU])
     machines = simulator.MachineSweep.make((1, 10))
-    full = simulator.simulate_sweep(p, sweep, machines)
-    fold = simulator.simulate_sweep(p, sweep, machines, fold=True)
+    full = api.sweep_program(p, sweep, machines)
+    fold = api.sweep_program(p, sweep, machines, fold=True)
     assert fold["fold_exact"].all()
     for k in simulator.COUNTER_NAMES:
         np.testing.assert_array_equal(full[k], fold[k], err_msg=k)

@@ -35,6 +35,7 @@ except Exception:                                     # pragma: no cover
     def settings(*a, **k):
         return lambda f: f
 
+from repro import api
 from repro.core import events, interpreter, isa, policies, simulator
 from repro.core.trace import Assembler, MemoryMap
 
@@ -90,7 +91,7 @@ def test_dispersion_semantics_preserving(prog, capacity, policy):
 def test_lru_hit_rate_monotone_in_capacity(prog):
     caps = [3, 4, 6, 8, 12]
     sweep = simulator.SweepConfig.make(caps, policies.LRU)
-    out = simulator.simulate_sweep(prog, sweep)
+    out = api.sweep_program(prog, sweep)
     hits = out["vrf_hits"]
     assert all(hits[i] <= hits[i + 1] for i in range(len(caps) - 1))
 

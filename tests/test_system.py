@@ -3,7 +3,7 @@ area/power verdict, exercised at reduced scale."""
 
 import numpy as np
 
-from repro import rvv
+from repro import api, rvv
 from repro.core import costmodel, events, interpreter, planner, simulator
 
 
@@ -17,7 +17,7 @@ def test_end_to_end_dispersion_study():
 
     caps = [3, 4, 5, 6, 8]
     sweep = simulator.SweepConfig.make(caps + [32])
-    out = simulator.simulate_sweep(built.program, sweep)
+    out = api.sweep_program(built.program, sweep)
     full = out["cycles"][-1]
     perf = full / out["cycles"][:-1]
     # performance is monotone in capacity and reaches ~full at 8
