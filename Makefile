@@ -7,7 +7,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 
-.PHONY: test-fast test bench docs-check
+.PHONY: test-fast test bench bench-smoke docs-check
 
 test-fast:
 	$(PYTEST) -x -q
@@ -17,6 +17,13 @@ test:
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_core.json
+
+# Schema guard: the full front door (suites, --kernels subsetting, schema-3
+# JSON with metric metadata) on a 2-kernel subset in a couple of minutes.
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+	  --json BENCH_smoke.json --kernels dropout,gemv \
+	  fig2 table3 fig6 fig8 pareto
 
 docs-check:
 	$(PYTEST) -x -q tests/test_docs.py

@@ -3,33 +3,24 @@ calibration and the cVRF savings *predictions* vs the paper's synthesis.
 
 Calibrated on the baseline only (VRF = 61% of VPU; VPU = 43.4% of CPU+VPU,
 derived from 53% VPU saving => 23% total saving).  The savings rows are
-model outputs to be compared against the paper's 3.5x / 53% / 23%."""
+model outputs to be compared against the paper's 3.5x / 53% / 23% — all
+five come from one ``repro.metrics.area_headline`` query."""
 
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import costmodel
+from repro import metrics
+
+PAPER = dict(baseline_vrf_pct_of_vpu=61.0, baseline_vpu_pct_of_total=43.4,
+             vrf_area_reduction_x=3.5, vpu_area_saving_pct=53.0,
+             total_area_saving_pct=23.0)
 
 
 def run() -> list[dict]:
-    full = costmodel.cpu_area(32, dispersed=False)
-    cvrf = costmodel.cpu_area(8, dispersed=True)   # + pinned v0 internally
-    rows = [
-        dict(name="baseline_vrf_pct_of_vpu",
-             value=round(100 * full.vrf / full.vpu, 1), paper=61.0),
-        dict(name="baseline_vpu_pct_of_total",
-             value=round(100 * full.vpu / full.total, 1), paper=43.4),
-        dict(name="vrf_area_reduction_x",
-             value=round(full.vrf / (cvrf.vrf + cvrf.dispersion_overhead),
-                         2), paper=3.5),
-        dict(name="vpu_area_saving_pct",
-             value=round(100 * (1 - cvrf.vpu / full.vpu), 1), paper=53.0),
-        dict(name="total_area_saving_pct",
-             value=round(100 * (1 - cvrf.total / full.total), 1), paper=23.0),
-    ]
-    for r in rows:
-        r["us_per_call"] = 0.0
-    return rows
+    head = metrics.area_headline(n_full=32, n_cvrf=8)
+    return [dict(name=name, us_per_call=0.0, value=round(value, 2),
+                 paper=PAPER[name])
+            for name, value in head.items()]
 
 
 def main():

@@ -39,8 +39,8 @@ def run(max_events=None, fold=True, target=0.95, names=None,
     return rows
 
 
-def main():
-    rows = run()
+def main(names=None, max_events=None):
+    rows = run(names=names, max_events=max_events)
     common.emit(rows, ["name", "us_per_call", "min_regs", "paper_min",
                        "active_regs", "hit_at_min"])
     return rows

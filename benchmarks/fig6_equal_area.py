@@ -1,12 +1,15 @@
 """Fig 6: equal-area comparison — Register Dispersion (cVRF of 8 x 256-bit)
 vs a full 32-register VRF of reduced 64-bit vector length.
 
-The narrow machine is modelled from the wide-machine simulation counters:
-with VL/4, every vector instruction strip-mines into 4 (4x base-occupancy
-and 4x loop overhead), while each 32-byte cacheline is now touched by four
-8-byte accesses (1 miss + 3 extra hits per previously-missed line); the
-narrow VRF holds all 32 registers so it has no dispersion stalls.  All
-results are normalised to the full-size 32 x 256-bit VRF.
+The narrow machine is the ``narrow_vrf_cycles`` model metric: with VL/4,
+every vector instruction strip-mines into 4 (4x base-occupancy and 4x loop
+overhead), while each 32-byte cacheline is now touched by four 8-byte
+accesses (1 miss + 3 extra hits per previously-missed line); the narrow
+VRF holds all 32 registers so it has no dispersion stalls.  L1 hit and
+miss costs come from the sweep's machine axes (1 + ``l1_hit_cycles``, miss
+adds ``mem_latency``), so equal-area results respond to machine-parameter
+sweeps.  All columns are baseline-relative queries against the full-size
+32 x 256-bit VRF (``baseline=dict(capacity=32)``).
 """
 
 from __future__ import annotations
@@ -14,16 +17,7 @@ from __future__ import annotations
 from benchmarks import common
 from repro import api, rvv
 
-
-def narrow_cycles(full: dict) -> float:
-    """Cycles for the 32-reg x 64-bit VRF machine from wide-VRF counters."""
-    l1_hits = float(full["l1_hits"])
-    l1_miss = float(full["l1_misses"])
-    mem_cycles = l1_hits * 1 + l1_miss * (1 + 5)
-    compute_cycles = float(full["cycles"]) - mem_cycles
-    # 4x strip-mine on compute/overhead; 4x accesses on memory, same misses.
-    naccess = (l1_hits + l1_miss) * 4
-    return 4.0 * compute_cycles + (naccess - l1_miss) * 1 + l1_miss * (1 + 5)
+FULL = dict(capacity=32)
 
 
 def run(max_events=None, fold=True, names=None, session=None) -> list[dict]:
@@ -33,23 +27,22 @@ def run(max_events=None, fold=True, names=None, session=None) -> list[dict]:
         ses.run, api.Sweep(kernels=names, capacity=[8, 32],
                            fold=fold, max_events=max_events))
     us_each = dt * 1e6 / len(names)
-    rows = []
-    for name in names:
-        cvrf8 = float(res.value("cycles", kernel=name, capacity=8))
-        full = float(res.value("cycles", kernel=name, capacity=32))
-        narrow = narrow_cycles({k: res.value(k, kernel=name, capacity=32)
-                                for k in res.keys()})
-        rows.append(dict(
-            name=name, us_per_call=round(us_each, 1),
-            dispersion_8x256=round(full / cvrf8, 3),
-            narrow_32x64=round(full / narrow, 3),
-            advantage=round(narrow / cvrf8, 2),
-        ))
-    return rows
+    r = (res.derive("speedup", baseline=FULL)
+            .derive("narrow_vrf_speedup")
+            .derive("equal_area_advantage", baseline=FULL))
+    return [dict(
+        name=name, us_per_call=round(us_each, 1),
+        dispersion_8x256=round(r.value("speedup", kernel=name,
+                                       capacity=8), 3),
+        narrow_32x64=round(r.value("narrow_vrf_speedup", kernel=name,
+                                   capacity=32), 3),
+        advantage=round(r.value("equal_area_advantage", kernel=name,
+                                capacity=8), 2),
+    ) for name in names]
 
 
-def main():
-    rows = run()
+def main(names=None, max_events=None):
+    rows = run(names=names, max_events=max_events)
     common.emit(rows, ["name", "us_per_call", "dispersion_8x256",
                        "narrow_32x64", "advantage"])
     return rows

@@ -3,8 +3,12 @@
 Per (arch x shape) on the single-pod mesh: the three roofline terms in
 seconds, the dominant bottleneck, MODEL_FLOPS (6ND / 6N_active*D + attention
 term), the useful-FLOP ratio, and the roofline fraction
-(t_compute / max(all terms)).  See EXPERIMENTS.md §Roofline for the analysis
-and §Perf for the hillclimbing log driven by this table."""
+(t_compute / max(all terms)).  Reachable from the front door as
+``python -m benchmarks.run roofline``; it replaces the old standalone
+``benchmarks.report`` markdown generator — ``run(mesh="multi")`` reads
+the multi-pod cells and the ``status``/``compile_s``/``mem_gb_per_dev``
+columns carry that table's dry-run facts.  With no ``results/dryrun``
+sweep on disk it emits an empty table rather than failing."""
 
 from __future__ import annotations
 
@@ -53,17 +57,21 @@ def run(mesh: str = "single") -> list[dict]:
             useful_flop_ratio=round(t["useful_flop_ratio"], 3),
             mem_gb_per_dev=round(cell.get("bytes_per_device", 0) / 1e9, 2),
             fits_16g=cell.get("fits_16g", ""),
+            compile_s=round(cell.get("compile_s", 0), 1),
         ))
     return rows
 
 
 def main():
+    rows = []
     for mesh in ("single",):
         print(f"# mesh={mesh}")
-        common.emit(run(mesh), [
+        rows = run(mesh)
+        common.emit(rows, [
             "name", "us_per_call", "status", "t_compute_ms", "t_memory_ms",
             "t_mem_ub_ms", "t_collective_ms", "bottleneck", "roofline_frac",
-            "useful_flop_ratio", "mem_gb_per_dev", "fits_16g"])
+            "useful_flop_ratio", "mem_gb_per_dev", "fits_16g", "compile_s"])
+    return rows
 
 
 if __name__ == "__main__":

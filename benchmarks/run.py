@@ -4,25 +4,36 @@ studies).  Prints ``name,us_per_call,derived...`` CSV blocks per benchmark.
   python -m benchmarks.run                       # everything
   python -m benchmarks.run table3 fig4           # subset
   python -m benchmarks.run --json BENCH_core.json fig4 table3
+  python -m benchmarks.run --kernels dropout,gemv --json BENCH_smoke.json
 
-``--json PATH`` writes a versioned report (``schema: 2``): per-suite
+``--kernels a,b`` restricts every suite whose ``main()`` takes a kernel
+list (table3/fig4/fig5/fig6/fig8/pareto) to that subset; fixed-roster
+studies (fig2, policy_headroom, ablation_sensitivity, ...) run their own
+set and say so.  ``make bench-smoke`` uses it to guard the JSON schema
+cheaply.  ``--max-events N`` forwards the legacy truncation budget the
+same way.
+
+``--json PATH`` writes a versioned report (``schema: 3``): per-suite
 wall-clock, XLA compile AND dispatch counts (the fused engine compiles once
 per (program-shape bucket, L1 geometry) — machine-latency grids are traced,
 so they add rows, not compiles), the sweep-axis metadata of every
-``repro.api`` sweep the suite ran, and per-kernel cycle counts (the perf
-trajectory record for this machine).
+``repro.api`` sweep the suite ran *including the metrics it derived*
+(name, kind, baseline, params), the full ``repro.metrics`` registry
+catalog, and per-kernel cycle counts (the perf trajectory record for this
+machine).
 """
 
 from __future__ import annotations
 
+import inspect
 import json
 import sys
 import time
 
-from repro import api
+from repro import api, metrics
 from repro.core import simulator
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -31,10 +42,12 @@ _MODULES = {
     "fig6": "benchmarks.fig6_equal_area",
     "fig2": "benchmarks.fig2_area_model",
     "fig8": "benchmarks.fig8_power",
+    "pareto": "benchmarks.pareto_frontier",
     "policy_headroom": "benchmarks.policy_headroom",
     "vmem_dispersion": "benchmarks.vmem_dispersion",
     "kv_dispersion": "benchmarks.kv_dispersion",
     "ablation_sensitivity": "benchmarks.ablation_sensitivity",
+    "roofline": "benchmarks.roofline",
 }
 
 SUITES = tuple(_MODULES)
@@ -44,23 +57,59 @@ _CYCLE_KEYS = ("vec_cycles", "scalar_cycles", "fifo_cycles",
 
 
 def _sweep_meta(history_slice: list[dict]) -> list[dict]:
-    """Axis metadata for the suite's ``Session.run`` calls (JSON-safe)."""
+    """Axis + derived-metric metadata for the suite's ``Session.run``
+    calls (JSON-safe)."""
     return [dict(axes=h["axes"], points=h["points"],
                  compiles=h["compiles"], dispatches=h["dispatches"],
-                 fold=h["fold"], kernel_params=h["kernel_params"])
+                 fold=h["fold"], kernel_params=h["kernel_params"],
+                 derived=list(h.get("derived", ())))
             for h in history_slice]
+
+
+def _call_main(mod, kernels, max_events):
+    """Invoke a suite's main(), forwarding only the kwargs it accepts."""
+    params = inspect.signature(mod.main).parameters
+    kw = {}
+    if kernels:
+        if "names" in params:
+            kw["names"] = list(kernels)
+        else:
+            print("(fixed-roster suite: --kernels ignored)", flush=True)
+    if max_events and "max_events" in params:
+        kw["max_events"] = max_events
+    return mod.main(**kw) or []
+
+
+def _pop_flag(args: list, flag: str):
+    if flag not in args:
+        return None
+    i = args.index(flag)
+    if i + 1 >= len(args):
+        raise SystemExit(f"error: {flag} requires a value")
+    value = args[i + 1]
+    del args[i:i + 2]
+    return value
 
 
 def main(argv=None) -> int:
     args = list(argv if argv is not None else sys.argv[1:])
-    json_path = None
-    if "--json" in args:
-        i = args.index("--json")
-        if i + 1 >= len(args):
-            print("error: --json requires a file path", file=sys.stderr)
+    try:
+        json_path = _pop_flag(args, "--json")
+        kernels = _pop_flag(args, "--kernels")
+        max_events = _pop_flag(args, "--max-events")
+    except SystemExit as e:
+        print(e, file=sys.stderr)
+        return 2
+    kernels = [k for k in kernels.split(",") if k] if kernels else None
+    if max_events is not None:
+        try:
+            max_events = int(max_events)
+            if max_events <= 0:
+                raise ValueError
+        except ValueError:
+            print(f"error: --max-events needs a positive integer, got "
+                  f"{max_events!r}", file=sys.stderr)
             return 2
-        json_path = args[i + 1]
-        del args[i:i + 2]
     suites = args or list(SUITES)
     unknown = [s for s in suites if s not in _MODULES]
     if unknown:
@@ -68,16 +117,17 @@ def main(argv=None) -> int:
               f"choose from: {', '.join(SUITES)}", file=sys.stderr)
         return 2
     session = api.default_session()
-    report = {"schema": SCHEMA_VERSION, "suites": {}, "kernels": {}}
+    report = {"schema": SCHEMA_VERSION, "suites": {}, "kernels": {},
+              "metrics": metrics.catalog()}
     t00 = time.time()
     for suite in suites:
-        mod = _MODULES[suite]
-        print(f"\n## {suite} ({mod})", flush=True)
+        mod = __import__(_MODULES[suite], fromlist=["main"])
+        print(f"\n## {suite} ({_MODULES[suite]})", flush=True)
         t0 = time.time()
         c0 = simulator.compile_count()
         d0 = simulator.dispatch_count()
         h0 = len(session.history)
-        rows = __import__(mod, fromlist=["main"]).main() or []
+        rows = _call_main(mod, kernels, max_events)
         dt = time.time() - t0
         print(f"## {suite} done in {dt:.1f}s", flush=True)
         report["suites"][suite] = {
@@ -91,7 +141,12 @@ def main(argv=None) -> int:
             cyc = {k: r[k] for k in _CYCLE_KEYS if k in r}
             if cyc and isinstance(r.get("name"), str):
                 kern = report["kernels"].setdefault(r["name"], {})
-                suffix = f"_cap{r['capacity']}" if "capacity" in r else ""
+                # Every grid field the row carries keys the record, so
+                # e.g. pareto rows at the same capacity but different L1
+                # geometries never overwrite each other.
+                suffix = "".join(
+                    f"_{tag}{r[f]}" for tag, f in
+                    (("cap", "capacity"), ("l1", "l1_kb")) if f in r)
                 for k, v in cyc.items():
                     kern[f"{suite}{suffix}.{k}"] = v
     total = time.time() - t00

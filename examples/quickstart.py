@@ -10,8 +10,8 @@ the minimal working set (Fig 5), and prints the area/power verdict
 
 import numpy as np
 
-from repro import api, rvv
-from repro.core import costmodel, interpreter, planner, policies, simulator
+from repro import api, metrics, rvv
+from repro.core import interpreter, planner, policies
 
 # 1. One Session owns every cache (built kernels, prepared traces) and
 #    plans sweep execution; build a paper kernel at a custom size.
@@ -44,14 +44,23 @@ for c in caps:
 plan = planner.min_registers_for_hit_rate(prog)
 print(f"min registers for >95% hit rate: {plan.min_capacity}")
 
-# 5. Figs 2/8: the hardware verdict for cVRF-8 vs the full VRF.
-full_a = costmodel.cpu_area(32)
-cvrf_a = costmodel.cpu_area(8, dispersed=True)
-c8 = simulator.simulate_one(prog, 8)
-c32 = simulator.simulate_one(prog, 32)
-p8 = costmodel.application_power(c8, 8, c8["cycles"], dispersed=True)
-p32 = costmodel.application_power(c32, 32, c32["cycles"])
-print(f"VPU area  -{100 * (1 - cvrf_a.vpu / full_a.vpu):.0f}%   "
-      f"total area -{100 * (1 - cvrf_a.total / full_a.total):.0f}%   "
-      f"power -{100 * (1 - p8['total'] / p32['total']):.0f}%   "
-      f"perf {float(c32['cycles']) / float(c8['cycles']):.3f}x")
+# 5. Figs 2/8: the hardware verdict for cVRF-8 vs the full VRF — the
+#    area/power models and baseline-relative savings are metrics evaluated
+#    over the sweep grid (docs/metrics.md), not hand-rolled loops.
+head = metrics.area_headline(n_full=32, n_cvrf=8)
+r = (res.derive("savings_pct", of="vpu_area",
+                baseline=dict(capacity=32), out="vpu_area_saving")
+        .derive("savings_pct", of="application_power",
+                baseline=dict(capacity=32), out="power_saving")
+        .derive("speedup", baseline=dict(capacity=32)))
+print(f"VPU area  -{r.value('vpu_area_saving', capacity=8):.0f}%   "
+      f"total area -{head['total_area_saving_pct']:.0f}%   "
+      f"power -{r.value('power_saving', capacity=8):.0f}%   "
+      f"perf {r.value('speedup', capacity=8):.3f}x")
+
+# 6. The design-space verdict in one query: the non-dominated
+#    (area, cycles) trade-off over every swept cVRF size.
+front = r.pareto(x="total_area", y="cycles")
+print("area-cycles front:",
+      " -> ".join(f"cVRF {f['capacity']} ({f['total_area'] / 1e6:.2f}Mau)"
+                  for f in front))

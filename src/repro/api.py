@@ -20,7 +20,10 @@ hand-rolled loop in user code — and the traced latency grid rides inside
 each dispatch.  The result is a :class:`SweepResult` with labeled axes,
 per-point counters and per-point ``fold_exact`` certificates, plus
 ``to_rows()`` / ``select()`` / ``value()`` accessors so suites never do
-index arithmetic on raw (P, C, M) arrays again.
+index arithmetic on raw (P, C, M) arrays again — and the metric algebra
+(``derive`` / ``normalize`` / ``pareto``, evaluated by the
+:mod:`repro.metrics` registry) so they never hand-roll derived
+quantities either.
 
 The Session owns every cache the old module-global benchmark layer held:
 built kernels, prepared (expanded + folded) traces, the fold/refine policy,
@@ -277,6 +280,9 @@ class Sweep:
 
 
 _CONFIG_FIELDS = ("capacity", "policy", "alloc_no_fetch")
+# Row-field name -> L1Geometry attribute, shared with repro.metrics'
+# axis_grid so label expansion and metric grids can never disagree.
+_GEOMETRY_FIELDS = {"l1_sets": "sets", "l1_ways": "ways", "l1_kb": "kbytes"}
 
 
 @dataclasses.dataclass
@@ -340,7 +346,9 @@ class SweepResult:
     def select(self, **sel) -> "SweepResult":
         """Filter axes by value (scalar keeps a length-1 axis; a list keeps
         the listed points).  With a zipped ``config`` axis, ``capacity`` /
-        ``policy`` / ``alloc_no_fetch`` filter by field."""
+        ``policy`` / ``alloc_no_fetch`` filter by field.  Views share the
+        sweep's ``meta``, so ``derive`` on any view records into the same
+        execution history entry."""
         r = self
         for key, want in sel.items():
             ai, idx = r._resolve(key, want)       # against the narrowed axes
@@ -350,7 +358,7 @@ class SweepResult:
             r = SweepResult(
                 tuple(axes),
                 {k: np.take(v, idx, axis=ai) for k, v in r.data.items()},
-                dict(self.meta))
+                self.meta)
         return r
 
     def value(self, counter: str, **sel):
@@ -386,6 +394,26 @@ class SweepResult:
         return {k: np.ascontiguousarray(v).reshape(p, c, m)
                 for k, v in r.data.items()}
 
+    def _labels(self, idx) -> dict:
+        """Axis labels of one grid point, expanded to scalar fields."""
+        row = {}
+        for a, i in zip(self.axes, idx):
+            v = a.values[i]
+            if a.name == "config":
+                row.update(capacity=v.capacity, policy=v.policy,
+                           alloc_no_fetch=v.alloc_no_fetch)
+                row["policy_name"] = policies.POLICY_NAMES[v.policy]
+            elif a.name == "policy":
+                row["policy"] = v
+                row["policy_name"] = policies.POLICY_NAMES[v]
+            elif a.name == "l1_geometry":
+                row["l1_geometry"] = str(v)
+                row.update({f: getattr(v, attr)
+                            for f, attr in _GEOMETRY_FIELDS.items()})
+            else:
+                row[a.name] = v
+        return row
+
     def to_rows(self, counters=None) -> list[dict]:
         """One dict per grid point: every axis label (config points and
         geometries expanded into scalar fields) plus the counters."""
@@ -393,24 +421,131 @@ class SweepResult:
             else list(self.data)
         rows = []
         for idx in np.ndindex(*self.shape):
-            row = {}
-            for a, i in zip(self.axes, idx):
-                v = a.values[i]
-                if a.name == "config":
-                    row.update(capacity=v.capacity, policy=v.policy,
-                               alloc_no_fetch=v.alloc_no_fetch)
-                    row["policy_name"] = policies.POLICY_NAMES[v.policy]
-                elif a.name == "policy":
-                    row["policy"] = v
-                    row["policy_name"] = policies.POLICY_NAMES[v]
-                elif a.name == "l1_geometry":
-                    row.update(l1_geometry=str(v), l1_sets=v.sets,
-                               l1_ways=v.ways, l1_kb=v.kbytes)
-                else:
-                    row[a.name] = v
+            row = self._labels(idx)
             for k in counters:
                 row[k] = self.data[k][idx].item()
             rows.append(row)
+        return rows
+
+    # -- the metric algebra (repro.metrics evaluates; this owns the axes) --
+
+    def _baseline_view(self, baseline: dict) -> "SweepResult":
+        """The baseline-aligned view of this grid, broadcastable against
+        it: every product axis named in ``baseline`` is pinned to exactly
+        one point (kept as a length-1 axis); on a zipped ``config`` axis,
+        ``capacity``/``policy``/``alloc_no_fetch`` keys pin *fields* and
+        each config point is aligned to the point sharing its remaining
+        fields (e.g. ``baseline=dict(policy="fifo")`` maps every (cap,
+        pol) point to (cap, FIFO))."""
+        if not isinstance(baseline, dict) or not baseline:
+            raise TypeError("baseline must be a non-empty dict of axis "
+                            "selections, e.g. dict(capacity=32)")
+        names = [a.name for a in self.axes]
+        r = self
+        pins = {}
+        for key, want in baseline.items():
+            if key in names:
+                r = r.select(**{key: want})
+                if len(r.axis(key)) != 1:
+                    raise ValueError(
+                        f"baseline {key}={want!r} selects "
+                        f"{len(r.axis(key))} points; pin exactly one")
+            elif key in _CONFIG_FIELDS and "config" in names:
+                pins[key] = _policy_id(want) if key == "policy" else want
+            else:
+                raise KeyError(
+                    f"unknown baseline axis {key!r}; axes: {names}")
+        if pins:
+            ai = names.index("config")
+            pts = r.axis("config").values
+            first = {}
+            for j, c in enumerate(pts):
+                first.setdefault((c.capacity, c.policy, c.alloc_no_fetch),
+                                 j)
+            idx = []
+            for c in pts:
+                tgt = tuple(pins.get(f, getattr(c, f))
+                            for f in _CONFIG_FIELDS)
+                if tgt not in first:
+                    raise ValueError(
+                        f"no baseline config point "
+                        f"{dict(zip(_CONFIG_FIELDS, tgt))} to align "
+                        f"{c} against")
+                idx.append(first[tgt])
+            axes = list(r.axes)
+            axes[ai] = Axis("config", tuple(pts[j] for j in idx))
+            r = SweepResult(
+                tuple(axes),
+                {k: np.take(v, idx, axis=ai) for k, v in r.data.items()},
+                self.meta)
+        return r
+
+    def derive(self, metric, baseline: dict | None = None,
+               out: str | None = None, **params) -> "SweepResult":
+        """Evaluate a registered :mod:`repro.metrics` metric over the whole
+        grid and return a new result carrying it as an extra labeled
+        counter (under ``out`` or the metric's name).  Relational metrics
+        require ``baseline=`` (an axis-selection dict); extra keyword
+        arguments are metric parameters.  Sub-metrics the evaluation pulls
+        in via ``ctx.counter`` ride along in the returned data.  Deriving
+        is pure counter algebra — it never compiles or dispatches."""
+        from repro import metrics as _metrics
+        m = _metrics.get(metric)
+        r = SweepResult(self.axes, dict(self.data), self.meta)
+        arr = _metrics.evaluate(r, m, baseline=baseline, params=params)
+        r.data[out or m.name] = np.broadcast_to(
+            np.asarray(arr), self.shape).copy()
+        record = dict(metric=m.name, kind=m.kind, out=out or m.name)
+        if baseline is not None:
+            record["baseline"] = {k: str(v) for k, v in baseline.items()}
+        if params:
+            record["params"] = {k: str(v) for k, v in params.items()}
+        derived = self.meta.setdefault("derived", [])
+        if record not in derived:
+            derived.append(record)
+        return r
+
+    def normalize(self, counter: str, baseline: dict) -> "SweepResult":
+        """Return a copy with ``counter`` divided by its value at the
+        ``baseline`` selection (broadcast; the baseline points read 1.0).
+        Other counters are untouched."""
+        base = self._baseline_view(baseline)
+        r = SweepResult(self.axes, dict(self.data), self.meta)
+        r.data[counter] = self.data[counter] / base.data[counter]
+        return r
+
+    def pareto(self, x: str, y: str, maximize: tuple = (),
+               **sel) -> list[dict]:
+        """The Pareto front over ``x`` vs ``y`` across every point of the
+        (optionally ``select``-narrowed) grid.  Both axes are minimized
+        unless named in ``maximize``; ``x``/``y`` may be counters or
+        registered non-relational metrics (derived on demand).  Returns
+        the non-dominated points as label rows (axis labels expanded, plus
+        the two objective values), sorted by ascending ``x``."""
+        r = self.select(**sel) if sel else self
+        for m in (x, y):
+            if m not in r.data:
+                r = r.derive(m)
+        xs = np.asarray(r.data[x], np.float64)
+        ys = np.asarray(r.data[y], np.float64)
+        sx = -1.0 if x in maximize else 1.0
+        sy = -1.0 if y in maximize else 1.0
+        idxs = list(np.ndindex(*r.shape))
+        pts = [(sx * xs[i], sy * ys[i]) for i in idxs]
+        front = []
+        for i, (xi, yi) in enumerate(pts):
+            dominated = any(
+                (xj <= xi and yj <= yi) and (xj < xi or yj < yi)
+                for j, (xj, yj) in enumerate(pts) if j != i)
+            if not dominated:
+                front.append(i)
+        rows = []
+        for i in front:
+            row = r._labels(idxs[i])
+            row[x] = xs[idxs[i]].item()
+            row[y] = ys[idxs[i]].item()
+            rows.append(row)
+        rows.sort(key=lambda rr: (rr[x], rr[y]))
         return rows
 
 

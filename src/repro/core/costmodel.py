@@ -51,6 +51,12 @@ ALU0_AU = 113670.0                   # 8-lane vector ALU (32b int+bf16 FMA)
 TAG_AU_PER_SLOT = 37.0               # 5b tag + valid + dirty + comparator
 CTRL_AU = 900.0                      # dispersion control unit / uop FSM
 SCALAR_AU = 572749.0                 # L31 scalar core incl. FPU + 2 RFs
+# 6T SRAM macro density, for the beyond-paper L1-inclusive trade-off
+# (the paper's Fig 2/7 areas exclude L1 macros; the Pareto-frontier study
+# needs L1 capacity on the same axis as the VRF).  Roughly 1/4 the area
+# per bit of the flop-based VRF, which is the usual macro-vs-RF ratio.
+SRAM_AU_PER_BIT = REG_AU_PER_BIT / 4.0
+SRAM_PERIPHERY_AU = 9000.0           # decoders + sense amps + tag array
 
 
 @dataclasses.dataclass
@@ -88,6 +94,37 @@ def cpu_area(n_vregs: int, vlen_bits: int = VLEN, n_lanes: int = 8,
     over = (n_vregs * TAG_AU_PER_SLOT + CTRL_AU) if dispersed else 0.0
     return AreaReport(vrf=vrf, coupling=couple, vpu_alu=alu,
                       dispersion_overhead=over, scalar_core=SCALAR_AU)
+
+
+def cpu_area_grid(n_vregs, vlen_bits: int = VLEN, n_lanes: int = 8,
+                  dispersed=False) -> dict:
+    """Vectorized :func:`cpu_area`: ``n_vregs`` / ``dispersed`` may be
+    ndarrays (broadcast together) and every component comes back as an
+    array of the broadcast shape.  Operation order mirrors the scalar path
+    exactly, so grid entries are bit-equal to per-point ``cpu_area`` calls
+    (pinned by ``tests/test_metrics.py``)."""
+    n_vregs = np.asarray(n_vregs, np.int64)
+    dispersed = np.asarray(dispersed, bool)
+    n_vregs, dispersed = np.broadcast_arrays(n_vregs, dispersed)
+    n_eff = n_vregs + dispersed                       # pinned v0
+    vrf = n_eff * vlen_bits * REG_AU_PER_BIT
+    couple = n_eff * vlen_bits * COUPLE_AU_PER_BIT
+    alu = np.broadcast_to(
+        np.asarray(ALU0_AU * (n_lanes / 8.0)), n_vregs.shape)
+    over = np.where(dispersed, n_vregs * TAG_AU_PER_SLOT + CTRL_AU, 0.0)
+    scalar = np.broadcast_to(np.asarray(SCALAR_AU), n_vregs.shape)
+    vpu = vrf + couple + alu + over
+    return dict(vrf=vrf, coupling=couple, vpu_alu=alu,
+                dispersion_overhead=over, scalar_core=scalar, vpu=vpu,
+                total=vpu + scalar)
+
+
+def l1_sram_area(sets, ways, line_bytes: int = 32):
+    """L1 data-cache macro area (beyond-paper; excluded from Fig 2/7).
+    Vectorized over ``sets``/``ways`` arrays."""
+    bits = np.asarray(sets, np.int64) * np.asarray(ways, np.int64) \
+        * (line_bytes * 8)
+    return bits * SRAM_AU_PER_BIT + SRAM_PERIPHERY_AU
 
 
 # --------------------------------------------------------------------------
@@ -200,7 +237,7 @@ def application_power(counters: dict, n_vregs: int, cycles: float,
     traffic the mechanism adds is charged at L1/memory energy, so the
     power saving is a *net* of smaller-VRF gains minus dispersion traffic.
     """
-    area = cpu_area(n_vregs, dispersed=dispersed)
+    area = cpu_area(n_vregs, n_lanes=n_lanes, dispersed=dispersed)
     n_eff = n_vregs + (1 if dispersed else 0)
     reg_ev = float(counters["reg_reads"] + counters["reg_writes"])
     l1_ev = float(counters["l1_hits"] + counters["mem_reads"]
@@ -218,3 +255,42 @@ def application_power(counters: dict, n_vregs: int, cycles: float,
     leak = area.total * pp.leak_per_au
     return dict(dynamic=dyn, clock=clock, leakage=leak, base=pp.p_base,
                 total=pp.p_base + dyn + clock + leak)
+
+
+def application_power_grid(counters: dict, n_vregs, n_lanes: int = 8,
+                           dispersed=False,
+                           pp: PowerParams = DEFAULT_POWER) -> dict:
+    """Vectorized :func:`application_power` over a whole counter grid.
+
+    ``counters`` holds counter-name -> ndarray grids (e.g. straight from a
+    :class:`repro.api.SweepResult`); ``n_vregs`` / ``dispersed`` broadcast
+    against them.  Term order mirrors the scalar path exactly, so every
+    grid entry is bit-equal to a per-point ``application_power`` call
+    (pinned by ``tests/test_metrics.py``) — this is what replaced fig8's
+    per-application Python loop."""
+    n_vregs = np.asarray(n_vregs, np.int64)
+    dispersed = np.asarray(dispersed, bool)
+    area_total = cpu_area_grid(n_vregs, n_lanes=n_lanes,
+                               dispersed=dispersed)["total"]
+    n_eff = n_vregs + dispersed
+    as_f = lambda v: np.asarray(v, np.float64)  # noqa: E731
+    reg_ev = as_f(counters["reg_reads"] + counters["reg_writes"])
+    l1_ev = as_f(counters["l1_hits"] + counters["mem_reads"]
+                 + counters["mem_writes"])
+    mem_ev = as_f(counters["l1_misses"])
+    alu_ev = as_f(counters["reg_writes"])
+    cyc = np.maximum(as_f(counters["cycles"]), 1.0)
+
+    dyn = (reg_ev * pp.e_vrf_access_per_reg * n_eff
+           + alu_ev * pp.e_alu_op
+           + cyc * 0.35 * pp.e_scalar_op
+           + l1_ev * pp.e_l1_access
+           + mem_ev * pp.e_mem_access) / cyc
+    clock = n_eff * VLEN * pp.clock_per_ff_bit
+    leak = area_total * pp.leak_per_au
+    total = pp.p_base + dyn + clock + leak
+    base = np.asarray(pp.p_base)
+    dyn, clock, leak, base, total = np.broadcast_arrays(
+        dyn, clock, leak, base, total)
+    return dict(dynamic=dyn, clock=clock, leakage=leak, base=base,
+                total=total)

@@ -18,6 +18,8 @@ NAMES = ("pathfinder", "jacobi2d", "somier", "gemv", "dropout",
     ("benchmarks.fig6_equal_area", {"max_events": 12_000, "names": NAMES}),
     ("benchmarks.fig2_area_model", {}),
     ("benchmarks.fig8_power", {"max_events": 12_000, "names": NAMES}),
+    ("benchmarks.pareto_frontier", {"max_events": 12_000,
+                                    "names": ["dropout", "gemv"]}),
     ("benchmarks.vmem_dispersion", {}),
     ("benchmarks.kv_dispersion", {"steps": 150}),
     # The machine-latency grid is traced (no per-machine rebuilds), but the
@@ -32,6 +34,27 @@ def test_suite_produces_rows(mod, kw):
     assert len(rows) > 0
     for r in rows:
         assert "name" in r
+
+
+def test_run_json_schema3(tmp_path):
+    """The front door's --json report: schema 3, --kernels subsetting, the
+    metric-registry catalog, and per-sweep derived-metric metadata."""
+    import json
+
+    from benchmarks import run as runner
+    out = tmp_path / "bench.json"
+    rc = runner.main(["--json", str(out), "--kernels", "dropout",
+                      "--max-events", "12000", "fig2", "fig6"])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["schema"] == 3
+    assert rep["metrics"]["speedup"]["kind"] == "relational"
+    assert rep["metrics"]["application_power"]["kind"] == "model"
+    fig6 = rep["suites"]["fig6"]
+    assert fig6["rows"] == 1                      # --kernels took effect
+    derived = [d["metric"] for s in fig6["sweeps"] for d in s["derived"]]
+    assert "equal_area_advantage" in derived and "speedup" in derived
+    assert runner.main(["nope"]) == 2
 
 
 def test_roofline_report_over_results():

@@ -28,9 +28,16 @@ def test_readme_quickstart_block_executes():
 
 
 def test_docs_pages_exist():
-    for page in ("api.md", "architecture.md", "folding.md"):
+    for page in ("api.md", "architecture.md", "folding.md", "metrics.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
+
+
+def test_metrics_doc_blocks_execute():
+    blocks = _python_blocks(ROOT / "docs" / "metrics.md")
+    assert blocks, "docs/metrics.md lost its ```python examples"
+    for block in blocks:
+        exec(compile(block, "docs/metrics.md", "exec"), {})
 
 
 def test_examples_quickstart_runs():

@@ -1,0 +1,299 @@
+"""Metric algebra over SweepResult: registry round-trip, vectorized model
+paths bit-equal to the scalar costmodel, normalize/pareto pinned on a
+hand-checkable grid, baseline alignment on product and zipped axes, and
+the paper-headline rows through the new API.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api, metrics
+from repro.core import costmodel, policies
+
+# ---------------------------------------------------------------------------
+# A hand-checkable toy grid: kernel ("a", "b") x capacity (8, 32), every
+# other axis a singleton, counters chosen so every metric is mental math.
+# ---------------------------------------------------------------------------
+
+
+def toy_result() -> api.SweepResult:
+    axes = (
+        api.Axis("kernel", ("a", "b")),
+        api.Axis("capacity", (8, 32)),
+        api.Axis("policy", (policies.FIFO,)),
+        api.Axis("alloc_no_fetch", (False,)),
+        api.Axis("l1_geometry", (api.L1Geometry(256, 2),)),
+        api.Axis("mem_latency", (5,)),
+        api.Axis("l1_hit_cycles", (0,)),
+        api.Axis("uop_hit_cycles", (1,)),
+    )
+    shape = (2, 2, 1, 1, 1, 1, 1, 1)
+
+    def grid(a_vals, b_vals):
+        return np.asarray([a_vals, b_vals], np.int64).reshape(shape)
+
+    data = dict(
+        cycles=grid([200, 100], [400, 400]),     # "a" 2x slower at cVRF-8
+        stall_cycles=grid([50, 0], [100, 100]),
+        spills=grid([4, 0], [8, 0]),
+        fills=grid([6, 0], [2, 0]),
+        l1_hits=grid([10, 10], [20, 20]),
+        l1_misses=grid([2, 2], [4, 4]),
+        reg_reads=grid([30, 30], [60, 60]),
+        reg_writes=grid([10, 10], [20, 20]),
+        mem_reads=grid([2, 2], [4, 4]),
+        mem_writes=grid([1, 1], [2, 2]),
+        vrf_hits=grid([90, 100], [180, 200]),
+        vrf_misses=grid([10, 0], [20, 0]),
+    )
+    data["hit_rate"] = data["vrf_hits"] / (data["vrf_hits"]
+                                           + data["vrf_misses"])
+    data["event_scale"] = np.full(shape, 1.0)
+    data["fold_exact"] = np.ones(shape, bool)
+    return api.SweepResult(axes, data, dict(kernel_params="paper"))
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trip.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trip():
+    assert {"speedup", "application_power", "total_area",
+            "narrow_vrf_cycles"} <= set(metrics.names())
+
+    @metrics.register("test_double_cycles", "derived", "2x cycles")
+    def _double(ctx):
+        return ctx.counter("cycles") * 2
+    try:
+        m = metrics.get("test_double_cycles")
+        assert m.kind == "derived" and m.doc == "2x cycles"
+        assert metrics.catalog()["test_double_cycles"]["kind"] == "derived"
+        r = toy_result().derive("test_double_cycles")
+        np.testing.assert_array_equal(r["test_double_cycles"],
+                                      r["cycles"] * 2)
+        with pytest.raises(ValueError, match="registered twice"):
+            metrics.register("test_double_cycles", "derived")(_double)
+        metrics.register("test_double_cycles", "derived",
+                         override=True)(_double)
+    finally:
+        metrics.unregister("test_double_cycles")
+    assert "test_double_cycles" not in metrics.names()
+    with pytest.raises(KeyError, match="unknown metric.*speedup"):
+        metrics.get("test_double_cycles")
+    with pytest.raises(ValueError, match="kind must be one of"):
+        metrics.register("test_bad_kind", "pointwise")(lambda ctx: 0)
+
+
+def test_kind_discipline():
+    res = toy_result()
+    with pytest.raises(ValueError, match="relational; pass baseline"):
+        res.derive("speedup")
+    with pytest.raises(ValueError, match="not relational"):
+        res.derive("scaled_cycles", baseline=dict(capacity=32))
+    with pytest.raises(KeyError, match="unknown metric"):
+        res.derive("nope")
+    with pytest.raises(TypeError, match="unknown parameter.*bogus"):
+        res.derive("speedup", baseline=dict(capacity=32), bogus=1)
+
+
+def test_params_propagate_through_composition():
+    """derive() parameters reach metrics pulled in via ctx.counter —
+    and parameterised evaluations never poison the canonical-name cache."""
+    res = toy_result()
+    cheap = costmodel.PowerParams(e_alu_op=0.0, e_l1_access=0.0)
+    default = res.derive("energy")
+    custom = res.derive("energy", pp=cheap)
+    assert (custom["energy"] < default["energy"]).all()
+    # the pp-specific application_power must not ride along under its
+    # canonical name (it would poison later parameter-free reads) ...
+    assert "application_power" not in custom.keys()
+    # ... while the parameter-free derive caches it as usual.
+    assert "application_power" in default.keys()
+    np.testing.assert_array_equal(
+        custom.derive("application_power")["application_power"],
+        default["application_power"])
+
+
+# ---------------------------------------------------------------------------
+# Vectorized model paths bit-equal to the scalar costmodel.
+# ---------------------------------------------------------------------------
+
+
+def test_cpu_area_grid_bit_equal_scalar():
+    n = np.arange(1, 41)
+    for dispersed in (False, True):
+        grids = costmodel.cpu_area_grid(n, dispersed=dispersed)
+        for i, nv in enumerate(n):
+            rep = costmodel.cpu_area(int(nv), dispersed=dispersed)
+            for key, want in rep.as_dict().items():
+                assert grids[key][i] == want, (key, nv, dispersed)
+
+
+def test_application_power_grid_bit_equal_scalar():
+    rng = np.random.default_rng(7)
+    shape = (3, 4)
+    counters = {k: rng.integers(0, 100_000, shape)
+                for k in ("reg_reads", "reg_writes", "l1_hits", "l1_misses",
+                          "mem_reads", "mem_writes", "cycles")}
+    n_vregs = np.asarray([4, 8, 32]).reshape(3, 1)
+    dispersed = n_vregs < 32
+    grids = costmodel.application_power_grid(counters, n_vregs,
+                                             dispersed=dispersed)
+    for idx in np.ndindex(*shape):
+        point = {k: float(v[idx]) for k, v in counters.items()}
+        want = costmodel.application_power(
+            point, int(np.broadcast_to(n_vregs, shape)[idx]),
+            point["cycles"],
+            dispersed=bool(np.broadcast_to(dispersed, shape)[idx]))
+        for key, v in want.items():
+            assert grids[key][idx] == v, (key, idx)
+
+
+def test_model_metrics_bit_equal_on_real_grid():
+    """The acceptance pin: the vectorized model metrics reproduce the old
+    per-point scalar loops exactly on an ablation-style grid — and derive
+    never compiles or dispatches."""
+    ses = api.Session(refine=False)
+    res = ses.run(api.Sweep(kernels=("dropout", "gemv"),
+                            capacity=(4, 8, 32), mem_latency=(1, 5),
+                            kernel_params="reduced"))
+    c0, d0 = ses.compile_count(), ses.dispatch_count()
+    r = (res.derive("application_power").derive("total_area")
+            .derive("vpu_area").derive("narrow_vrf_cycles"))
+    assert (ses.compile_count(), ses.dispatch_count()) == (c0, d0)
+    for row in res.to_rows():
+        pt = dict(kernel=row["kernel"], capacity=row["capacity"],
+                  mem_latency=row["mem_latency"])
+        counters = {k: float(res.value(k, **pt)) for k in res.keys()}
+        dispersed = row["capacity"] < 32
+        power = costmodel.application_power(
+            counters, row["capacity"], counters["cycles"],
+            dispersed=dispersed)
+        area = costmodel.cpu_area(row["capacity"], dispersed=dispersed)
+        assert r.value("application_power", **pt) == power["total"]
+        assert r.value("total_area", **pt) == area.total
+        assert r.value("vpu_area", **pt) == area.vpu
+        # fig6's old hardcoded narrow machine (hit=1, miss=1+5) is the
+        # mem_latency=5 point of the metric's machine-axis parameterised
+        # model.
+        if row["mem_latency"] == 5:
+            mem = counters["l1_hits"] * 1 + counters["l1_misses"] * (1 + 5)
+            comp = counters["cycles"] - mem
+            nacc = (counters["l1_hits"] + counters["l1_misses"]) * 4
+            want = (4.0 * comp + (nacc - counters["l1_misses"]) * 1
+                    + counters["l1_misses"] * (1 + 5))
+            assert r.value("narrow_vrf_cycles", **pt) == want
+
+
+# ---------------------------------------------------------------------------
+# normalize / relational baselines / pareto on the toy grid.
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_pinned():
+    r = toy_result().normalize("cycles", baseline=dict(capacity=32))
+    np.testing.assert_array_equal(
+        np.squeeze(r["cycles"]), [[2.0, 1.0], [1.0, 1.0]])
+    # other counters untouched
+    np.testing.assert_array_equal(r["spills"], toy_result()["spills"])
+
+
+def test_speedup_and_savings_pinned():
+    res = toy_result()
+    r = (res.derive("speedup", baseline=dict(capacity=32))
+            .derive("savings_pct", of="cycles", baseline=dict(kernel="b"),
+                    out="vs_b"))
+    np.testing.assert_array_equal(
+        np.squeeze(r["speedup"]), [[0.5, 1.0], [1.0, 1.0]])
+    # savings vs kernel "b": a@8 saves 50% of 400, a@32 saves 75%.
+    np.testing.assert_array_equal(
+        np.squeeze(r["vs_b"]), [[50.0, 75.0], [0.0, 0.0]])
+    assert r.value("speedup", kernel="a", capacity=8) == 0.5
+    with pytest.raises(ValueError, match="pin exactly one"):
+        res.derive("speedup", baseline=dict(capacity=[8, 32]))
+    with pytest.raises(KeyError, match="unknown baseline axis"):
+        res.derive("speedup", baseline=dict(not_an_axis=1))
+
+
+def test_derived_metrics_pinned():
+    r = toy_result().derive("spill_traffic_bytes").derive("scaled_cycles")
+    np.testing.assert_array_equal(
+        np.squeeze(r["spill_traffic_bytes"]), [[320, 0], [320, 0]])
+    np.testing.assert_array_equal(r["scaled_cycles"], r["cycles"] * 1.0)
+
+
+def test_pareto_pinned():
+    res = toy_result()
+    # kernel "a": area grows with capacity, cycles shrink -> both points
+    # on the front; kernel "b": cycles equal, so capacity 32 is dominated
+    # (same cycles, more area) and only capacity 8 survives.
+    r = res.derive("total_area")
+    front_a = r.pareto(x="total_area", y="cycles", kernel="a")
+    assert [f["capacity"] for f in front_a] == [8, 32]
+    assert front_a[0]["kernel"] == "a" and front_a[0]["cycles"] == 200.0
+    front_b = r.pareto(x="total_area", y="cycles", kernel="b")
+    assert [f["capacity"] for f in front_b] == [8]
+    # maximize flips an axis: the largest-area point is now the x-winner.
+    front_max = r.pareto(x="total_area", y="cycles",
+                         maximize=("total_area",), kernel="b")
+    assert [f["capacity"] for f in front_max] == [32]
+    # derived on demand: pareto derives registered metrics it is given.
+    assert res.pareto(x="total_area", y="cycles", kernel="b")
+
+
+def test_baseline_field_match_on_zipped_config(fresh_default_session):
+    pts = [api.ConfigPoint(4, policies.FIFO),
+           api.ConfigPoint(4, policies.LRU),
+           api.ConfigPoint(8, policies.FIFO),
+           api.ConfigPoint(8, policies.FIFO, True)]
+    res = fresh_default_session.run(
+        api.Sweep(kernels=["dropout"], config_points=pts,
+                  kernel_params="reduced"))
+    r = (res.derive("speedup", baseline=dict(policy="fifo",
+                                             alloc_no_fetch=False))
+            .derive("delta", of="hit_rate",
+                    baseline=dict(policy="fifo", alloc_no_fetch=False),
+                    out="hit_gain"))
+    # FIFO points are their own baseline...
+    assert r.value("speedup", capacity=4, policy="fifo",
+                   alloc_no_fetch=False) == 1.0
+    assert r.value("hit_gain", capacity=8, policy="fifo",
+                   alloc_no_fetch=False) == 0.0
+    # ...and each capacity aligns against ITS OWN FIFO point.
+    want = (res.value("cycles", capacity=4, policy="fifo")
+            / res.value("cycles", capacity=4, policy="lru"))
+    assert r.value("speedup", capacity=4, policy="lru") == want
+    with pytest.raises(ValueError, match="no baseline config point"):
+        res.derive("speedup", baseline=dict(policy="opt"))
+
+
+# ---------------------------------------------------------------------------
+# The paper-headline rows through the new API (fast tier).
+# ---------------------------------------------------------------------------
+
+
+def test_area_headlines_through_metrics():
+    head = metrics.area_headline()
+    assert abs(head["baseline_vrf_pct_of_vpu"] - 61.0) < 0.5
+    assert abs(head["vrf_area_reduction_x"] - 3.5) < 0.1       # 3.5x
+    assert abs(head["vpu_area_saving_pct"] - 53.0) < 1.0       # 53%
+    assert abs(head["total_area_saving_pct"] - 23.0) < 1.0     # 23%
+
+
+def test_power_and_equal_area_headlines_through_suites():
+    """Fig 8's ~10% average power saving and Fig 6's dispersion-beats-
+    narrowing verdict, asserted through the rewired metric-query suites
+    (fast-tier kernel subset + truncated traces, as the harness runs)."""
+    from benchmarks import fig6_equal_area, fig8_power
+    # The harness's fast-tier kernel subset (tests/test_benchmarks_harness)
+    # so the prepared-trace cache is shared within one tier-1 run.
+    NAMES = ("pathfinder", "jacobi2d", "somier", "gemv", "dropout",
+             "conv2d_7x7", "densenet121_l105")
+    rows = fig8_power.run(max_events=12_000, names=NAMES)
+    avg = next(r for r in rows if r["name"] == "AVERAGE")
+    assert avg["paper_saving"] == 10.0
+    assert abs(avg["saving_pct"] - 10.0) < 2.0, rows   # measured: 9.8%
+    for row in fig6_equal_area.run(max_events=12_000, names=NAMES):
+        assert row["advantage"] > 1.0, row
+        assert row["narrow_32x64"] < row["dispersion_8x256"], row
