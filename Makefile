@@ -7,7 +7,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 
-.PHONY: test-fast test bench bench-smoke docs-check
+.PHONY: test-fast test bench bench-smoke serve-smoke docs-check
 
 test-fast:
 	$(PYTEST) -x -q
@@ -18,12 +18,19 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_core.json
 
-# Schema guard: the full front door (suites, --kernels subsetting, schema-3
+# Schema guard: the full front door (suites, --kernels subsetting, schema-4
 # JSON with metric metadata) on a 2-kernel subset in a couple of minutes.
-bench-smoke:
+bench-smoke: serve-smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 	  --json BENCH_smoke.json --kernels dropout,gemv \
 	  fig2 table3 fig6 fig8 pareto
+
+# Serving-side schema guard: kv_dispersion + the serving SLO suite on the
+# smoke grid (2 hot-pool sizes, tiny scenario) under a tight event budget.
+serve-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+	  --json BENCH_serve_smoke.json --max-events 120 \
+	  kv_dispersion serving_slo
 
 docs-check:
 	$(PYTEST) -x -q tests/test_docs.py

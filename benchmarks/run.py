@@ -13,14 +13,15 @@ set and say so.  ``make bench-smoke`` uses it to guard the JSON schema
 cheaply.  ``--max-events N`` forwards the legacy truncation budget the
 same way.
 
-``--json PATH`` writes a versioned report (``schema: 3``): per-suite
+``--json PATH`` writes a versioned report (``schema: 4``): per-suite
 wall-clock, XLA compile AND dispatch counts (the fused engine compiles once
 per (program-shape bucket, L1 geometry) — machine-latency grids are traced,
 so they add rows, not compiles), the sweep-axis metadata of every
 ``repro.api`` sweep the suite ran *including the metrics it derived*
 (name, kind, baseline, params), the full ``repro.metrics`` registry
-catalog, and per-kernel cycle counts (the perf trajectory record for this
-machine).
+catalog, per-kernel cycle counts (the perf trajectory record for this
+machine), and — schema 4 — any per-suite ``json_extra()`` payload (the
+serving SLO suite exports its footprint-vs-latency Pareto fronts there).
 """
 
 from __future__ import annotations
@@ -33,7 +34,7 @@ import time
 from repro import api, metrics
 from repro.core import simulator
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -46,6 +47,7 @@ _MODULES = {
     "policy_headroom": "benchmarks.policy_headroom",
     "vmem_dispersion": "benchmarks.vmem_dispersion",
     "kv_dispersion": "benchmarks.kv_dispersion",
+    "serving_slo": "benchmarks.serving_slo",
     "ablation_sensitivity": "benchmarks.ablation_sensitivity",
     "roofline": "benchmarks.roofline",
 }
@@ -137,6 +139,10 @@ def main(argv=None) -> int:
             "dispatches": simulator.dispatch_count() - d0,
             "sweeps": _sweep_meta(session.history[h0:]),
         }
+        # schema 4: suites may export a JSON-safe payload of their own
+        # (e.g. serving_slo's footprint-vs-latency Pareto fronts)
+        if hasattr(mod, "json_extra"):
+            report["suites"][suite]["extra"] = mod.json_extra()
         for r in rows:
             cyc = {k: r[k] for k in _CYCLE_KEYS if k in r}
             if cyc and isinstance(r.get("name"), str):

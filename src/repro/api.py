@@ -307,6 +307,40 @@ class SweepResult:
     def shape(self) -> tuple[int, ...]:
         return tuple(len(a) for a in self.axes)
 
+    @classmethod
+    def from_table(cls, axes: dict, rows: list[dict], values=None,
+                   meta: dict | None = None) -> "SweepResult":
+        """Assemble a labeled grid from flat result rows.
+
+        ``axes`` is an ordered {name: values} mapping; every row must carry
+        each axis name (its value locating the row on the grid) plus the
+        measured fields.  ``values`` names the fields to grid (default:
+        every non-axis key of the first row).  Missing grid points read
+        NaN.  This is how non-simulator sweeps (e.g. the serving SLO
+        benchmark) ride the same ``select``/``pareto``/``derive`` surface
+        as the cVRF grids.
+        """
+        ax = tuple(Axis(n, tuple(_as_tuple(v))) for n, v in axes.items())
+        if not rows:
+            raise ValueError("from_table needs at least one row")
+        names = [a.name for a in ax]
+        if values is None:
+            values = [k for k in rows[0] if k not in names]
+        shape = tuple(len(a) for a in ax)
+        data = {k: np.full(shape, np.nan) for k in values}
+        lookup = [{v: i for i, v in enumerate(a.values)} for a in ax]
+        for row in rows:
+            try:
+                idx = tuple(lk[row[a.name]]
+                            for a, lk in zip(ax, lookup))
+            except KeyError as e:
+                raise ValueError(
+                    f"row {row!r} has no grid point for axis value "
+                    f"{e.args[0]!r}") from None
+            for k in values:
+                data[k][idx] = float(row[k])
+        return cls(ax, data, meta if meta is not None else {})
+
     def keys(self):
         return self.data.keys()
 
@@ -426,6 +460,20 @@ class SweepResult:
                 row[k] = self.data[k][idx].item()
             rows.append(row)
         return rows
+
+    def quantile(self, q: float, over: str) -> "SweepResult":
+        """Collapse the ``over`` axis to its q-th percentile (0..100),
+        counter by counter — e.g. ``result.quantile(99, over="seed")``
+        turns a per-seed grid into a p99 grid.  The collapsed axis is
+        removed from the result."""
+        names = [a.name for a in self.axes]
+        if over not in names:
+            raise KeyError(f"no axis {over!r}; axes: {names}")
+        ai = names.index(over)
+        axes = tuple(a for a in self.axes if a.name != over)
+        data = {k: np.percentile(v, q, axis=ai)
+                for k, v in self.data.items()}
+        return SweepResult(axes, data, self.meta)
 
     # -- the metric algebra (repro.metrics evaluates; this owns the axes) --
 

@@ -477,6 +477,40 @@ def _equal_area_advantage(ctx, base):
 
 
 # ---------------------------------------------------------------------------
+# Serving SLO metrics: over grids built with SweepResult.from_table from
+# repro.serve.slo.SLOReport rows (the serving_slo benchmark).
+# ---------------------------------------------------------------------------
+
+
+@register("slo_attainment", "derived",
+          "fraction of admission attempts meeting their deadline: "
+          "1 - deadline_miss_rate",
+          params=())
+def _slo_attainment(ctx):
+    return 1.0 - ctx.counter("deadline_miss_rate")
+
+
+@register("goodput", "derived",
+          "SLO-weighted throughput: tokens_per_tick * slo_attainment "
+          "(tokens that arrived in time, per virtual tick)",
+          params=())
+def _goodput(ctx):
+    return ctx.counter("tokens_per_tick") * ctx.counter("slo_attainment")
+
+
+@register("degraded_throughput_ratio", "derived",
+          "throughput under active faults over overall throughput "
+          "(degraded_tokens_per_tick / tokens_per_tick); ~1.0 means "
+          "degradation was graceful, 0 means service stopped",
+          params=())
+def _degraded_throughput_ratio(ctx):
+    tps = np.asarray(ctx.counter("tokens_per_tick"), np.float64)
+    deg = np.asarray(ctx.counter("degraded_tokens_per_tick"), np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(tps > 0, deg / np.maximum(tps, 1e-12), 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Standalone model queries (no sweep needed).
 # ---------------------------------------------------------------------------
 

@@ -31,9 +31,16 @@ class Heartbeat:
         self._last = time.monotonic()
         self.records: list[HeartbeatRecord] = []
 
-    def beat(self, step: int) -> HeartbeatRecord:
-        now = time.monotonic()
-        rec = HeartbeatRecord(self.host, step, now, now - self._last)
+    def beat(self, step: int, now: float | None = None,
+             step_time: float | None = None) -> HeartbeatRecord:
+        """Record a beat.  With no arguments the wall clock is read (the
+        trainer path); a virtual-time caller (the serving engine) passes
+        ``now``/``step_time`` explicitly so detection stays deterministic."""
+        if now is None:
+            now = time.monotonic()
+        if step_time is None:
+            step_time = now - self._last
+        rec = HeartbeatRecord(self.host, step, now, step_time)
         self._last = now
         self.records.append(rec)
         if len(self.records) > 1000:

@@ -1,5 +1,16 @@
-from repro.serve import engine, kvcache
+from repro.serve import chaos, engine, kvcache, slo, traffic
+from repro.serve.chaos import (FAULT_PROFILES, FaultEvent, FaultInjector,
+                               FaultProfile, make_profile)
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kvcache import DispersedKVPool, PagePoolConfig
-__all__ = ["engine", "kvcache", "Request", "ServeEngine",
-           "DispersedKVPool", "PagePoolConfig"]
+from repro.serve.slo import SLOReport, summarize
+from repro.serve.traffic import (TRAFFIC_MIXES, Scenario, Tenant,
+                                 TrafficConfig, VirtualClock, generate)
+
+__all__ = [
+    "engine", "kvcache", "traffic", "chaos", "slo",
+    "Request", "ServeEngine", "DispersedKVPool", "PagePoolConfig",
+    "VirtualClock", "Tenant", "TrafficConfig", "Scenario", "generate",
+    "TRAFFIC_MIXES", "FaultEvent", "FaultProfile", "FaultInjector",
+    "make_profile", "FAULT_PROFILES", "SLOReport", "summarize",
+]

@@ -15,6 +15,14 @@ driving the hardware simulator, so the paper's policy results (FIFO is
 enough; Fig 4/5) transfer measurably: `stats()` reports hit rates that the
 serving benchmark compares against the cVRF curves.
 
+Beyond the paper, the pool is a *live-degradable* resource: ``shrink()``
+reduces the hot capacity mid-service (forced spill of policy-selected
+victims, then continued operation from the smaller pool) — the memory-
+pressure lever ``repro.serve.chaos`` pulls — and ``pin``/``unpin``/
+``evict``/``release`` give the serving engine explicit page lifetime
+control (sink pinning per active sequence, spill-to-cold on preemption,
+free-on-completion).
+
 This is a host-side controller managing device arrays; on a real cluster the
 cold region lives in host RAM and transfers overlap decode steps.
 """
@@ -57,9 +65,10 @@ class DispersedKVPool:
         self.freq = np.zeros(n, np.int64)
         self.next_use = np.zeros(n, np.int64)
         self.pinned = np.zeros(n, bool)
+        self._pin_set: set[int] = set(range(cfg.pin_first))
         self._seq = 0
         self._now = 0
-        self.hits = self.misses = self.spills = self.fills = 0
+        self.reset_stats()
 
     # ------------------------------------------------------------- cache --
     def _slot_of(self, page: int) -> int | None:
@@ -97,7 +106,7 @@ class DispersedKVPool:
         self.ins_seq[s] = self._seq
         self.last_use[s] = self._now
         self.freq[s] = 1
-        self.pinned[s] = page < self.cfg.pin_first
+        self.pinned[s] = page in self._pin_set
         return s
 
     def read(self, page: int) -> jnp.ndarray:
@@ -109,18 +118,129 @@ class DispersedKVPool:
         self.hot = self.hot.at[s].set(value.astype(self.hot.dtype))
 
     def flush(self) -> jnp.ndarray:
-        """Spill everything; returns the full logical tensor (cold view)."""
+        """Spill everything; returns the full logical tensor (cold view).
+        Idempotent: a second flush with no intervening writes is a no-op."""
         for s in range(self.cfg.num_hot_pages):
             if self.tags[s] >= 0 and self.dirty[s]:
                 self.cold = self.cold.at[int(self.tags[s])].set(self.hot[s])
                 self.dirty[s] = False
         return self.cold
 
+    # ----------------------------------------------------- page lifetime --
+    def pin(self, page: int) -> None:
+        """Pin ``page`` hot from now on (the per-sequence attention-sink
+        analogue of the paper's v0).  The pool refuses to pin its whole
+        capacity: at least two slots must stay evictable."""
+        if page in self._pin_set:
+            return
+        if len(self._pin_set) >= self.cfg.num_hot_pages - 2:
+            raise ValueError(
+                f"cannot pin page {page}: {len(self._pin_set)} of "
+                f"{self.cfg.num_hot_pages} hot slots already pinned "
+                "(two must stay evictable)")
+        self._pin_set.add(page)
+        s = self._slot_of(page)
+        if s is not None:
+            self.pinned[s] = True
+
+    def unpin(self, page: int) -> None:
+        self._pin_set.discard(page)
+        s = self._slot_of(page)
+        if s is not None:
+            self.pinned[s] = False
+
+    def evict(self, page: int) -> None:
+        """Force ``page`` out of the hot pool (writeback to cold if dirty).
+        The cold copy stays valid — this is the preemption spill path."""
+        s = self._slot_of(page)
+        if s is None:
+            return
+        if self.dirty[s]:
+            self.cold = self.cold.at[int(self.tags[s])].set(self.hot[s])
+            self.spills += 1
+        self._drop_slot(s)
+
+    def release(self, page: int) -> None:
+        """Discard ``page`` entirely (no writeback): its hot slot is freed
+        and the cold copy is considered garbage — completion/abort path."""
+        self.unpin(page)
+        s = self._slot_of(page)
+        if s is not None:
+            self._drop_slot(s)
+
+    def _drop_slot(self, s: int) -> None:
+        self.tags[s] = -1
+        self.dirty[s] = False
+        self.pinned[s] = False
+        self.ins_seq[s] = self.last_use[s] = 0
+        self.freq[s] = self.next_use[s] = 0
+
+    # -------------------------------------------------- graceful shrink --
+    def shrink(self, new_hot_pages: int) -> int:
+        """Shrink the hot pool *live* to ``new_hot_pages`` slots: victims
+        are selected by the configured replacement policy (pinned pages
+        survive), dirty victims are spilled to cold, and service continues
+        from the smaller pool.  Returns the number of pages spilled.
+
+        This is the memory-pressure event of the chaos harness — the
+        paper's economics (a physically smaller pool degrades through the
+        hierarchy instead of failing) exercised while serving.
+        """
+        n = self.cfg.num_hot_pages
+        if new_hot_pages >= n:
+            return 0
+        if new_hot_pages < max(2 + len(self._pin_set), 2):
+            raise ValueError(
+                f"cannot shrink hot pool to {new_hot_pages}: "
+                f"{len(self._pin_set)} pinned pages + 2 evictable slots "
+                "must fit")
+        drop: list[int] = []
+        spilled = 0
+        for _ in range(n - new_hot_pages):
+            # Prefer free slots; otherwise the policy picks the victim
+            # among slots not already scheduled for removal.
+            tags = self.tags.copy()
+            tags[drop] = -2                       # poison: neither free
+            pinned = self.pinned.copy()           # nor evictable
+            pinned[drop] = True
+            free = np.nonzero(tags == -1)[0]
+            if free.size:
+                drop.append(int(free[0]))
+                continue
+            s = policies.np_select_victim(
+                tags, self.ins_seq, self.last_use, self.freq,
+                self.next_use, pinned, n, self.cfg.policy)
+            if self.dirty[s]:
+                self.cold = self.cold.at[int(self.tags[s])].set(self.hot[s])
+                self.spills += 1
+                spilled += 1
+            drop.append(s)
+        keep = np.asarray([i for i in range(n) if i not in set(drop)],
+                          np.int64)
+        self.hot = self.hot[jnp.asarray(keep)]
+        for name in ("tags", "dirty", "ins_seq", "last_use", "freq",
+                     "next_use", "pinned"):
+            setattr(self, name, getattr(self, name)[keep])
+        self.cfg.num_hot_pages = new_hot_pages
+        self.shrinks += 1
+        return spilled
+
+    # --------------------------------------------------------- accounting --
+    def reset_stats(self) -> None:
+        """Zero the access counters (hits/misses/spills/fills/shrinks) so a
+        pool can be reused across sweep points — or a steady-state window
+        measured after warm-up — without stat bleed.  Cache *contents* are
+        untouched."""
+        self.hits = self.misses = self.spills = self.fills = 0
+        self.shrinks = 0
+
     def stats(self) -> dict:
         total = self.hits + self.misses
         return dict(hits=self.hits, misses=self.misses,
                     hit_rate=self.hits / max(total, 1), spills=self.spills,
-                    fills=self.fills,
+                    fills=self.fills, shrinks=self.shrinks,
+                    hot_pages=int(self.cfg.num_hot_pages),
+                    pinned_pages=len(self._pin_set),
                     hot_bytes=int(np.prod(self.hot.shape))
                     * self.hot.dtype.itemsize,
                     cold_bytes=int(np.prod(self.cold.shape))

@@ -36,8 +36,8 @@ def test_suite_produces_rows(mod, kw):
         assert "name" in r
 
 
-def test_run_json_schema3(tmp_path):
-    """The front door's --json report: schema 3, --kernels subsetting, the
+def test_run_json_schema(tmp_path):
+    """The front door's --json report: schema 4, --kernels subsetting, the
     metric-registry catalog, and per-sweep derived-metric metadata."""
     import json
 
@@ -47,7 +47,7 @@ def test_run_json_schema3(tmp_path):
                       "--max-events", "12000", "fig2", "fig6"])
     assert rc == 0
     rep = json.loads(out.read_text())
-    assert rep["schema"] == 3
+    assert rep["schema"] == 4
     assert rep["metrics"]["speedup"]["kind"] == "relational"
     assert rep["metrics"]["application_power"]["kind"] == "model"
     fig6 = rep["suites"]["fig6"]

@@ -28,7 +28,8 @@ def test_readme_quickstart_block_executes():
 
 
 def test_docs_pages_exist():
-    for page in ("api.md", "architecture.md", "folding.md", "metrics.md"):
+    for page in ("api.md", "architecture.md", "folding.md", "metrics.md",
+                 "serving.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
 
@@ -38,6 +39,13 @@ def test_metrics_doc_blocks_execute():
     assert blocks, "docs/metrics.md lost its ```python examples"
     for block in blocks:
         exec(compile(block, "docs/metrics.md", "exec"), {})
+
+
+def test_serving_doc_blocks_execute():
+    blocks = _python_blocks(ROOT / "docs" / "serving.md")
+    assert blocks, "docs/serving.md lost its ```python example"
+    for block in blocks:
+        exec(compile(block, "docs/serving.md", "exec"), {})
 
 
 def test_examples_quickstart_runs():

@@ -1,0 +1,322 @@
+"""Serving robustness tests: traffic determinism, pool invariants, the
+admission/deadline/preemption control plane, and the seeded chaos
+acceptance scenario (faulted run == fault-free run, token for token)."""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import registry
+from repro.core import policies
+from repro.models import get_model
+from repro.runtime.fault_tolerance import Heartbeat
+from repro.serve import (DispersedKVPool, PagePoolConfig, Request,
+                         ServeEngine, chaos, slo, traffic)
+
+MAX_LEN = 48
+PAGE = 8
+
+
+@functools.lru_cache(maxsize=None)
+def _built(arch="phi3-mini-3.8b"):
+    cfg = registry.get(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    decode = jax.jit(model.decode_step)
+    return cfg, model, params, decode
+
+
+def _engine(**kw):
+    cfg, model, params, decode = _built()
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    return ServeEngine(cfg, params, model=model, decode_fn=decode, **kw)
+
+
+def _dispersed(**kw):
+    kw.setdefault("kv_mode", "dispersed")
+    kw.setdefault("page_size", PAGE)
+    return _engine(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: empty prompts are rejected, not decoded forever.
+# ---------------------------------------------------------------------------
+
+
+def test_empty_prompt_rejected():
+    eng = _engine()
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(prompt=[]))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.enqueue(Request(prompt=[]))
+    assert all(r is None for r in eng.active) and not eng.queue
+
+
+# ---------------------------------------------------------------------------
+# Satellite: DispersedKVPool invariants.
+# ---------------------------------------------------------------------------
+
+
+def _pool(hot=4, pages=16, policy=policies.FIFO, pin_first=1):
+    return DispersedKVPool(PagePoolConfig(
+        num_logical_pages=pages, num_hot_pages=hot, page_shape=(6,),
+        policy=policy, pin_first=pin_first))
+
+
+def test_read_after_spill_round_trip_bit_identical():
+    pool = _pool(hot=4, pages=12)
+    want = {p: jnp.full((6,), 1.0 + p * 0.125, jnp.bfloat16)
+            for p in range(12)}
+    for p, v in want.items():          # 12 pages through 4 hot slots
+        pool.write(p, v)
+    assert pool.spills > 0             # dirty victims really went cold
+    for p, v in want.items():
+        got = pool.read(p)
+        assert jnp.array_equal(got, v), f"page {p} corrupted by spill"
+
+
+@pytest.mark.parametrize("policy", sorted(policies.POLICY_NAMES),
+                         ids=lambda p: policies.POLICY_NAMES[p])
+def test_pinned_sink_never_evicted_any_policy(policy):
+    pool = _pool(hot=4, pages=32, policy=policy, pin_first=1)
+    pool.write(0, jnp.arange(6, dtype=jnp.bfloat16))
+    rng = np.random.default_rng(0)
+    for p in rng.integers(1, 32, 200):
+        pool.read(int(p))
+        assert 0 in pool.tags, (
+            f"pinned sink evicted under {policies.POLICY_NAMES[policy]}")
+    assert jnp.array_equal(pool.read(0), jnp.arange(6, dtype=jnp.bfloat16))
+
+
+def test_flush_idempotent():
+    pool = _pool(hot=4, pages=8)
+    for p in range(6):
+        pool.write(p, jnp.full((6,), float(p), jnp.bfloat16))
+    cold1 = np.asarray(pool.flush().astype(jnp.float32))
+    spills = pool.spills
+    cold2 = np.asarray(pool.flush().astype(jnp.float32))
+    assert np.array_equal(cold1, cold2)
+    assert pool.spills == spills          # second flush moved nothing
+    assert not pool.dirty.any()
+
+
+def test_reset_stats_keeps_contents():
+    pool = _pool()
+    pool.write(3, jnp.ones((6,), jnp.bfloat16))
+    pool.read(5)
+    assert pool.misses > 0
+    pool.reset_stats()
+    st = pool.stats()
+    assert (st["hits"], st["misses"], st["spills"], st["fills"]) == (0,) * 4
+    assert jnp.array_equal(pool.read(3), jnp.ones((6,), jnp.bfloat16))
+
+
+def test_shrink_spills_and_preserves_data():
+    pool = _pool(hot=8, pages=16)
+    want = {p: jnp.full((6,), 2.0 + p, jnp.bfloat16) for p in range(8)}
+    for p, v in want.items():
+        pool.write(p, v)
+    pool.shrink(4)
+    assert pool.cfg.num_hot_pages == 4
+    assert pool.hot.shape[0] == 4
+    assert pool.shrinks == 1
+    for p, v in want.items():          # victims came back from cold intact
+        assert jnp.array_equal(pool.read(p), v)
+    with pytest.raises(ValueError):
+        pool.shrink(2)                 # pinned + 2 evictable won't fit
+
+
+# ---------------------------------------------------------------------------
+# Traffic generator: seeded and replayable.
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_deterministic_per_seed():
+    cfg = traffic.TrafficConfig(arrival="mmpp", n_requests=12)
+    a, b = traffic.generate(cfg, seed=7), traffic.generate(cfg, seed=7)
+    assert a.arrivals == b.arrivals
+    c = traffic.generate(cfg, seed=8)
+    assert a.arrivals != c.arrivals
+    ts = [s.t for s in a.arrivals]
+    assert ts == sorted(ts) and all(len(s.prompt) >= 1 for s in a.arrivals)
+
+
+def test_traffic_mixes_cover_tenant_families():
+    scen = traffic.generate(
+        dataclasses.replace(traffic.TRAFFIC_MIXES["steady"],
+                            n_requests=64), seed=0)
+    names = {s.tenant for s in scen.arrivals}
+    assert "dense" in names and len(names) >= 3
+
+
+# ---------------------------------------------------------------------------
+# Control plane: admission, deadlines, preemption.
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_backpressure_rejects():
+    eng = _engine(max_queue=3)
+    reqs = [Request(prompt=[1 + i], max_new_tokens=2) for i in range(6)]
+    accepted = [eng.enqueue(r) for r in reqs]
+    assert accepted == [True] * 3 + [False] * 3
+    assert eng.rejected == 3
+    assert all(r.status == "rejected" for r in reqs[3:])
+
+
+def test_deadline_timeout_retries_then_fails():
+    eng = _engine(max_retries=2, backoff_base=1.0, backoff_cap=4.0)
+    # deadline shorter than the prompt: every attempt must time out
+    req = Request(prompt=[3] * 10, max_new_tokens=8, deadline=2.0,
+                  arrival_t=0.0)
+    eng.serve([req], max_steps=200)
+    assert req.status == "failed"
+    assert req.retries == 2
+    assert eng.deadline_misses == 3        # initial attempt + two retries
+
+
+def test_preempted_request_resumes_bit_identically():
+    r_ref = Request(prompt=[5, 6, 7], max_new_tokens=8)
+    _engine(slots=1).run([r_ref])
+    assert r_ref.done
+
+    for mk in (_engine, _dispersed):
+        eng = mk(slots=1)
+        req = Request(prompt=[5, 6, 7], max_new_tokens=8)
+        assert eng.submit(req)
+        for _ in range(5):                 # past prefill, mid-decode
+            eng.step()
+        assert len(req.out) > 0 and not req.done
+        eng.preempt(0)
+        assert req.status == "preempted" and eng.active[0] is None
+        eng._admit_from_queue(eng.clock.now)
+        assert req.status == "running"
+        while not req.done:
+            eng.step()
+        assert req.out == r_ref.out, "resume diverged from the unpreempted run"
+        assert req.preemptions == 1
+
+
+def test_dispersed_mode_rejects_recurrent_state():
+    cfg = registry.get("falcon-mamba-7b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent state"):
+        ServeEngine(cfg, params, slots=2, max_len=MAX_LEN, model=model,
+                    kv_mode="dispersed", page_size=PAGE)
+
+
+def test_heartbeat_virtual_time_is_deterministic():
+    hb = Heartbeat(host_id=3)
+    rec = hb.beat(1, now=10.0, step_time=2.5)
+    assert (rec.host, rec.step, rec.t, rec.step_time) == (3, 1, 10.0, 2.5)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the seeded chaos scenario vs its fault-free twin.
+# ---------------------------------------------------------------------------
+
+
+def _chaos_scenario():
+    cfg = dataclasses.replace(
+        traffic.TRAFFIC_MIXES["steady"], n_requests=6, max_len=MAX_LEN,
+        vocab=_built()[0].vocab_size, deadline=400.0)
+    return traffic.generate(cfg, seed=1)
+
+
+def test_chaos_run_bit_identical_to_fault_free():
+    scen = _chaos_scenario()
+    hot = 12
+
+    e0 = _dispersed(hot_pages=hot)
+    free = e0.serve(scen)
+    assert all(r.status == "done" for r in free)
+
+    profile = chaos.FAULT_PROFILES["chaos"](
+        scen.horizon + 60, 2, hot, seed=0)
+    kinds = {e.kind for e in profile.events}
+    assert kinds == {"latency_spike", "slot_fail", "mem_pressure"}
+
+    e1 = _dispersed(hot_pages=hot)
+    inj = chaos.FaultInjector(profile)
+    hit = e1.serve(scen, chaos=inj)
+    assert {e.kind for e in inj.applied} == kinds   # every fault fired
+    assert e1.pool.shrinks == 1                     # pool shrank live
+
+    # all admitted requests complete under fire...
+    assert all(r.status == "done" for r in hit)
+    # ...with outputs bit-identical to the fault-free run — including any
+    # preempted-and-resumed victims
+    by_rid = {r.rid: r for r in free}
+    for r in hit:
+        assert r.out == by_rid[r.rid].out, (
+            f"rid {r.rid} diverged under chaos (preemptions="
+            f"{r.preemptions})")
+
+    rep = slo.summarize(e1, hit)
+    assert rep.n_done == len(hit)
+    assert rep.degraded_ticks > 0
+    assert rep.p99_decode_ticks >= rep.p50_decode_ticks > 0
+
+
+# ---------------------------------------------------------------------------
+# SweepResult.from_table / quantile and the SLO metric registry.
+# ---------------------------------------------------------------------------
+
+
+def test_from_table_pareto_and_metrics():
+    rows = []
+    for hot, (bytes_, p99, tps, miss) in {
+            4: (4096, 3.0, 0.5, 0.2), 8: (8192, 1.5, 0.8, 0.0),
+            16: (16384, 1.6, 0.9, 0.0)}.items():
+        rows.append(dict(hot_pages=hot, policy=policies.FIFO,
+                         hot_bytes=bytes_, p99_decode_ticks=p99,
+                         tokens_per_tick=tps, deadline_miss_rate=miss,
+                         degraded_tokens_per_tick=tps * 0.5))
+    res = api.SweepResult.from_table(
+        dict(hot_pages=(4, 8, 16), policy=(policies.FIFO,)), rows)
+    assert res.shape == (3, 1)
+    assert res.value("hot_bytes", hot_pages=8) == 8192
+
+    front = res.pareto("hot_bytes", "p99_decode_ticks")
+    assert [r["hot_pages"] for r in front] == [4, 8]   # 16 dominated
+    assert front[0]["policy_name"] == "fifo"
+
+    res = res.derive("slo_attainment").derive("goodput")
+    assert res.value("slo_attainment", hot_pages=4) == pytest.approx(0.8)
+    assert res.value("goodput", hot_pages=8) == pytest.approx(0.8)
+    res = res.derive("degraded_throughput_ratio")
+    assert res.value("degraded_throughput_ratio",
+                     hot_pages=16) == pytest.approx(0.5)
+
+
+def test_quantile_collapses_axis():
+    rows = [dict(cap=c, seed=s, lat=float(10 * c + s))
+            for c in (1, 2) for s in range(5)]
+    res = api.SweepResult.from_table(
+        dict(cap=(1, 2), seed=tuple(range(5))), rows)
+    q = res.quantile(50, over="seed")
+    assert [a.name for a in q.axes] == ["cap"]
+    assert q.value("lat", cap=1) == pytest.approx(12.0)
+    assert q.value("lat", cap=2) == pytest.approx(22.0)
+    with pytest.raises(KeyError):
+        res.quantile(50, over="nope")
+
+
+# ---------------------------------------------------------------------------
+# Full sweep (slow tier): the benchmark suite end to end.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_serving_slo_suite_smoke():
+    from benchmarks import serving_slo
+    rows = serving_slo.main(max_events=120)
+    assert rows and all("p99" in r for r in rows)
+    extra = serving_slo.json_extra()
+    assert extra["pareto"]["none"]["p99"], "empty Pareto front"
