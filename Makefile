@@ -7,7 +7,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 
-.PHONY: test-fast test bench bench-smoke serve-smoke docs-check
+.PHONY: test-fast test bench bench-smoke serve-smoke roofline-smoke \
+	docs-check
 
 test-fast:
 	$(PYTEST) -x -q
@@ -20,7 +21,7 @@ bench:
 
 # Schema guard: the full front door (suites, --kernels subsetting, schema-4
 # JSON with metric metadata) on a 2-kernel subset in a couple of minutes.
-bench-smoke: serve-smoke
+bench-smoke: serve-smoke roofline-smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 	  --json BENCH_smoke.json --kernels dropout,gemv \
 	  fig2 table3 fig6 fig8 pareto
@@ -31,6 +32,20 @@ serve-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 	  --json BENCH_serve_smoke.json --max-events 120 \
 	  kv_dispersion serving_slo
+
+# Roofline regression guard: the measured Pallas suite on the smoke grid
+# must record >0 rows and >0 dispatches with the per-point measured/model
+# payload present — the suite can never silently regress to 0 rows again.
+roofline-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+	  --json BENCH_roofline_smoke.json --max-events 120 roofline
+	PYTHONPATH=$(PYTHONPATH) python -c "import json; \
+	  r = json.load(open('BENCH_roofline_smoke.json'))['suites']['roofline']; \
+	  assert r['rows'] > 0 and r['dispatches'] > 0, r; \
+	  assert r['extra']['rows'] and all('model_agree' in p \
+	    for p in r['extra']['rows']), r['extra']; \
+	  print('roofline smoke OK:', r['rows'], 'rows,', \
+	        r['dispatches'], 'dispatches')"
 
 docs-check:
 	$(PYTEST) -x -q tests/test_docs.py

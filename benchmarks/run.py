@@ -21,7 +21,10 @@ so they add rows, not compiles), the sweep-axis metadata of every
 (name, kind, baseline, params), the full ``repro.metrics`` registry
 catalog, per-kernel cycle counts (the perf trajectory record for this
 machine), and — schema 4 — any per-suite ``json_extra()`` payload (the
-serving SLO suite exports its footprint-vs-latency Pareto fronts there).
+serving SLO suite exports its footprint-vs-latency Pareto fronts there;
+the roofline suite its per-point measured/model rows and equal-VMEM
+winners).  Suites exposing ``perf_stats()`` add their own Pallas
+compile/dispatch counts to the suite record.
 """
 
 from __future__ import annotations
@@ -129,6 +132,7 @@ def main(argv=None) -> int:
         c0 = simulator.compile_count()
         d0 = simulator.dispatch_count()
         h0 = len(session.history)
+        ps0 = mod.perf_stats() if hasattr(mod, "perf_stats") else {}
         rows = _call_main(mod, kernels, max_events)
         dt = time.time() - t0
         print(f"## {suite} done in {dt:.1f}s", flush=True)
@@ -139,6 +143,14 @@ def main(argv=None) -> int:
             "dispatches": simulator.dispatch_count() - d0,
             "sweeps": _sweep_meta(session.history[h0:]),
         }
+        # Suites that drive Pallas kernels directly (the roofline) count
+        # their own compiles/dispatches — the simulator probes never see
+        # those executions.
+        if hasattr(mod, "perf_stats"):
+            ps = mod.perf_stats()
+            for key in ("compiles", "dispatches"):
+                report["suites"][suite][key] += \
+                    ps.get(key, 0) - ps0.get(key, 0)
         # schema 4: suites may export a JSON-safe payload of their own
         # (e.g. serving_slo's footprint-vs-latency Pareto fronts)
         if hasattr(mod, "json_extra"):

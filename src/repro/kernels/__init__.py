@@ -1,7 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; see ops.py)."""
 
 from repro.kernels import (dispersed_gemm, flash_attention, ops, ref,
-                           rmsnorm)
+                           rmsnorm, traffic)
 
 __all__ = ["dispersed_gemm", "flash_attention", "ops", "ref",
-           "rmsnorm"]
+           "rmsnorm", "traffic"]

@@ -18,7 +18,11 @@ Two schedules expose the paper's trade-off:
     round-trips through HBM (grid (k, m) with the output block revisited
     per k step), i.e. every "register access" is a spill+fill.
 
-``hbm_traffic_model`` gives the closed-form bytes for the roofline tables.
+``hbm_traffic_model`` gives the closed-form bytes for the roofline tables;
+``grouped_schedule`` / ``dispersed_schedule`` expose the grids and the
+*same index-map lambdas* the ``pallas_call``s are built from, so
+:func:`repro.kernels.traffic.count` can cross-check the closed form
+against the schedule the hardware actually runs.
 """
 
 from __future__ import annotations
@@ -29,6 +33,66 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import traffic
+
+ACC_BYTES = 4      # both schedules accumulate in f32
+
+
+def _check_tiles(m: int, k: int, k2: int, *, block_m: int, block_k: int):
+    """Shared kernel/model legality: clamp blocks, then require exact
+    tiling.  Raises ``ValueError`` naming the offending dimension (bare
+    asserts vanish under ``python -O`` and are useless from jit traces)."""
+    if k != k2:
+        raise ValueError(
+            f"contraction mismatch: a has k={k} columns but b has k={k2} "
+            f"rows")
+    block_m = min(block_m, m)
+    block_k = min(block_k, k)
+    if block_m <= 0 or block_k <= 0:
+        raise ValueError(
+            f"block_m/block_k must be positive, got ({block_m}, {block_k})")
+    if m % block_m:
+        raise ValueError(
+            f"m={m} is not divisible by block_m={block_m}; legal block_m "
+            f"values divide m (e.g. {[d for d in (8, 16, 32, 64, 128, 256) if m % d == 0]})")
+    if k % block_k:
+        raise ValueError(
+            f"k={k} is not divisible by block_k={block_k}; legal block_k "
+            f"values divide k (e.g. {[d for d in (64, 128, 256, 512) if k % d == 0]})")
+    return block_m, block_k, m // block_m, k // block_k
+
+
+def _check_working_set(working_set: int, nm: int) -> tuple[int, int]:
+    """Clamp W to the tile count, then require it to divide ``nm`` —
+    the grouped grid is (groups, k, W) with groups = nm / W."""
+    if working_set < 1:
+        raise ValueError(
+            f"working_set must be >= 1, got {working_set} (use "
+            f"matmul_dispersed for the W=0 extreme)")
+    w = min(working_set, nm)
+    if nm % w:
+        raise ValueError(
+            f"working_set={working_set} (clamped to {w}) does not divide "
+            f"the m-tile count nm={nm}; legal working sets: "
+            f"{[d for d in range(1, nm + 1) if nm % d == 0]}")
+    return w, nm // w
+
+
+def _grouped_maps(w: int):
+    """The grouped schedule's BlockSpec index maps — single source of
+    truth for both ``matmul_grouped`` and its traffic schedule."""
+    a = lambda g, ik, iw: (g * w + iw, ik)
+    b = lambda g, ik, iw: (ik, 0)
+    o = lambda g, ik, iw: (g * w + iw, 0)
+    return a, b, o
+
+
+def _dispersed_maps():
+    a = lambda ik, im: (im, ik)
+    b = lambda ik, im: (ik, 0)
+    o = lambda ik, im: (im, 0)
+    return a, b, o
 
 
 def _grouped_kernel(a_ref, b_ref, o_ref, acc_scr, *, nk: int):
@@ -61,25 +125,19 @@ def matmul_grouped(a, b, *, block_m: int = 128, block_k: int = 512,
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2
-    block_m = min(block_m, m)
-    block_k = min(block_k, k)
-    assert m % block_m == 0 and k % block_k == 0
-    nm, nk = m // block_m, k // block_k
-    w = min(working_set, nm)
-    assert nm % w == 0
-    groups = nm // w
+    block_m, block_k, nm, nk = _check_tiles(
+        m, k, k2, block_m=block_m, block_k=block_k)
+    w, groups = _check_working_set(working_set, nm)
+    a_map, b_map, o_map = _grouped_maps(w)
 
     out = pl.pallas_call(
         functools.partial(_grouped_kernel, nk=nk),
         grid=(groups, nk, w),
         in_specs=[
-            pl.BlockSpec((block_m, block_k),
-                         lambda g, ik, iw, w=w: (g * w + iw, ik)),
-            pl.BlockSpec((block_k, n), lambda g, ik, iw: (ik, 0)),
+            pl.BlockSpec((block_m, block_k), a_map),
+            pl.BlockSpec((block_k, n), b_map),
         ],
-        out_specs=pl.BlockSpec((block_m, n),
-                               lambda g, ik, iw, w=w: (g * w + iw, 0)),
+        out_specs=pl.BlockSpec((block_m, n), o_map),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((w, block_m, n), jnp.float32)],
         interpret=interpret,
@@ -113,40 +171,86 @@ def matmul_dispersed(a, b, *, block_m: int = 128, block_k: int = 512,
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2
-    block_m = min(block_m, m)
-    block_k = min(block_k, k)
-    assert m % block_m == 0 and k % block_k == 0
-    nm, nk = m // block_m, k // block_k
+    block_m, block_k, nm, nk = _check_tiles(
+        m, k, k2, block_m=block_m, block_k=block_k)
+    a_map, b_map, o_map = _dispersed_maps()
 
     out = pl.pallas_call(
         functools.partial(_dispersed_kernel, nk=nk),
         grid=(nk, nm),
         in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda ik, im: (im, ik)),
-            pl.BlockSpec((block_k, n), lambda ik, im: (ik, 0)),
+            pl.BlockSpec((block_m, block_k), a_map),
+            pl.BlockSpec((block_k, n), b_map),
         ],
-        out_specs=pl.BlockSpec((block_m, n), lambda ik, im: (im, 0)),
+        out_specs=pl.BlockSpec((block_m, n), o_map),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(a, b)
     return out.astype(a.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Traffic geometry: the measured side of the roofline's model check.
+# ---------------------------------------------------------------------------
+
+
+def grouped_schedule(m: int, n: int, k: int, *, block_m: int, block_k: int,
+                     working_set: int,
+                     bytes_per_el: int = 2) -> traffic.Schedule:
+    """The grouped schedule's grid + operand parts, built from the same
+    index maps as ``matmul_grouped`` (A/B stream in at the input width;
+    C is a pure output — the accumulator lives in VMEM scratch)."""
+    block_m, block_k, nm, nk = _check_tiles(
+        m, k, k, block_m=block_m, block_k=block_k)
+    w, groups = _check_working_set(working_set, nm)
+    a_map, b_map, o_map = _grouped_maps(w)
+    return traffic.Schedule(
+        grid=(groups, nk, w),
+        parts=(
+            traffic.Part("a", block_m * block_k * bytes_per_el, a_map, "in"),
+            traffic.Part("b", block_k * n * bytes_per_el, b_map, "in"),
+            traffic.Part("c", block_m * n * bytes_per_el, o_map, "out"),
+        ))
+
+
+def dispersed_schedule(m: int, n: int, k: int, *, block_m: int,
+                       block_k: int,
+                       bytes_per_el: int = 2) -> traffic.Schedule:
+    """The dispersed schedule's geometry: C is an HBM-resident accumulator
+    (kind ``"acc"``) — every revisit is a fill + spill at f32 width."""
+    block_m, block_k, nm, nk = _check_tiles(
+        m, k, k, block_m=block_m, block_k=block_k)
+    a_map, b_map, o_map = _dispersed_maps()
+    return traffic.Schedule(
+        grid=(nk, nm),
+        parts=(
+            traffic.Part("a", block_m * block_k * bytes_per_el, a_map, "in"),
+            traffic.Part("b", block_k * n * bytes_per_el, b_map, "in"),
+            traffic.Part("c", block_m * n * ACC_BYTES, o_map, "acc"),
+        ))
+
+
 def hbm_traffic_model(m: int, n: int, k: int, *, block_m: int, block_k: int,
                       working_set: int, bytes_per_el: int = 2) -> dict:
     """Closed-form HBM bytes for the two schedules (roofline input).
 
-    grouped: A once, B once per group (=nm/W), C once.
-    dispersed: A once, B once per k-step... (B reused across m at fixed k),
-               C spilled+filled per k step.
+    grouped: A once, B once per group (= nm/W fetches of the full panel),
+    C written once — all at the input element width (the accumulator stays
+    in VMEM scratch).
+    dispersed: A once, B once (reused across m at fixed k), C spilled AND
+    filled on each of the nk k-steps at the f32 accumulator width.
+
+    Legality mirrors the kernels: blocks are clamped to the problem dims,
+    tiling must be exact, and ``working_set`` (after clamping to the m-tile
+    count) must divide it — ``matmul_grouped`` rejects exactly the same
+    configurations, so the model can never quote traffic for a schedule
+    the kernel refuses to run.
     """
-    nm = m // block_m
-    nk = k // block_k
-    w = min(working_set, nm)
-    groups = max(nm // w, 1)
+    block_m, block_k, nm, nk = _check_tiles(
+        m, k, k, block_m=block_m, block_k=block_k)
+    w, groups = _check_working_set(working_set, nm)
     grouped = (m * k + groups * k * n + m * n) * bytes_per_el
-    dispersed = (m * k + nk * k * n // nk + 2 * m * n * nk) * bytes_per_el
+    dispersed = (m * k + k * n) * bytes_per_el + 2 * m * n * nk * ACC_BYTES
     ideal = (m * k + k * n + m * n) * bytes_per_el
     return dict(grouped=grouped, dispersed=dispersed, ideal=ideal,
-                vmem_acc_bytes=w * block_m * n * 4)
+                vmem_acc_bytes=w * block_m * n * ACC_BYTES)

@@ -24,8 +24,39 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import traffic
+
 NEG_INF = -1e30
 LANES = 128
+ACC_BYTES = 4      # m/l/acc scratch is f32
+
+
+def _check_blocks(sq: int, sk: int, *, block_q: int, block_k: int):
+    """Clamp blocks to the sequence lengths, then require exact tiling —
+    raising ``ValueError``s that name the offending dimension instead of
+    bare asserts (which vanish under ``python -O``)."""
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q:
+        raise ValueError(
+            f"query length sq={sq} is not divisible by block_q={block_q}; "
+            f"legal block_q values divide sq (e.g. "
+            f"{[d for d in (32, 64, 128, 256) if sq % d == 0]})")
+    if sk % block_k:
+        raise ValueError(
+            f"key length sk={sk} is not divisible by block_k={block_k}; "
+            f"legal block_k values divide sk (e.g. "
+            f"{[d for d in (32, 64, 128, 256) if sk % d == 0]})")
+    return block_q, block_k, sq // block_q, sk // block_k
+
+
+def _flash_maps():
+    """BlockSpec index maps — shared with :func:`flash_schedule` so the
+    traffic count walks exactly the grid the kernel runs."""
+    q = lambda bh_, iq, ik: (bh_, iq, 0)
+    kv = lambda bh_, iq, ik: (bh_, ik, 0)
+    o = lambda bh_, iq, ik: (bh_, iq, 0)
+    return q, kv, o
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -92,17 +123,19 @@ def flash_attention(q, k, v, *, causal: bool = False,
     """
     b, h, sq, d = q.shape
     sk = k.shape[2]
+    if k.shape[1] != h:
+        raise ValueError(
+            f"flash_attention needs equal head counts, got q heads={h} vs "
+            f"k/v heads={k.shape[1]} (use ops.flash_attention for GQA)")
     if scale is None:
         scale = float(d) ** -0.5
-    block_q = min(block_q, sq)
-    block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0
+    block_q, block_k, nq, nk = _check_blocks(
+        sq, sk, block_q=block_q, block_k=block_k)
     bh = b * h
     qr = q.reshape(bh, sq, d)
     kr = k.reshape(bh, sk, d)
     vr = v.reshape(bh, sk, d)
-    nq = sq // block_q
-    nk = sk // block_k
+    q_map, kv_map, o_map = _flash_maps()
 
     kernel = functools.partial(
         _flash_kernel, causal=causal, scale=scale, block_q=block_q,
@@ -111,12 +144,11 @@ def flash_attention(q, k, v, *, causal: bool = False,
         kernel,
         grid=(bh, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda bh_, iq, ik: (bh_, iq, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh_, iq, ik: (bh_, ik, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh_, iq, ik: (bh_, ik, 0)),
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d),
-                               lambda bh_, iq, ik: (bh_, iq, 0)),
+        out_specs=pl.BlockSpec((1, block_q, d), o_map),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, LANES), jnp.float32),      # running max
@@ -126,3 +158,56 @@ def flash_attention(q, k, v, *, causal: bool = False,
         interpret=interpret,
     )(qr, kr, vr)
     return out.reshape(b, h, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# Traffic geometry: the measured side of the roofline's model check.
+# ---------------------------------------------------------------------------
+
+
+def flash_schedule(b: int, h: int, sq: int, sk: int, d: int, *,
+                   block_q: int, block_k: int,
+                   bytes_per_el: int = 2) -> traffic.Schedule:
+    """The flash schedule's grid + operand parts, built from the same
+    index maps as :func:`flash_attention`.  Q and O move once; K/V are
+    re-streamed once per q block (the price of the O(1) working set)."""
+    block_q, block_k, nq, nk = _check_blocks(
+        sq, sk, block_q=block_q, block_k=block_k)
+    q_map, kv_map, o_map = _flash_maps()
+    return traffic.Schedule(
+        grid=(b * h, nq, nk),
+        parts=(
+            traffic.Part("q", block_q * d * bytes_per_el, q_map, "in"),
+            traffic.Part("k", block_k * d * bytes_per_el, kv_map, "in"),
+            traffic.Part("v", block_k * d * bytes_per_el, kv_map, "in"),
+            traffic.Part("o", block_q * d * bytes_per_el, o_map, "out"),
+        ))
+
+
+def hbm_traffic_model(b: int, h: int, sq: int, sk: int, d: int, *,
+                      block_q: int, block_k: int,
+                      bytes_per_el: int = 2) -> dict:
+    """Closed-form HBM bytes for attention schedules (roofline input).
+
+    flash: Q and O once; the K/V panels re-streamed once per q block —
+    kv traffic scales as nq = sq/block_q (larger q blocks = a larger VMEM
+    working set = fewer K/V re-fetches: the same register/traffic
+    trade-off as the grouped GEMM).
+    materialized: the dispersed extreme — the (sq, sk) score matrix is
+    spilled to and refilled from HBM at f32 width, as a non-fused
+    attention would.
+    ideal: every operand exactly once.
+    """
+    block_q, block_k, nq, nk = _check_blocks(
+        sq, sk, block_q=block_q, block_k=block_k)
+    bh = b * h
+    q_bytes = bh * sq * d * bytes_per_el
+    kv_bytes = bh * sk * d * bytes_per_el           # one of K or V
+    o_bytes = q_bytes
+    flash = q_bytes + o_bytes + 2 * nq * kv_bytes
+    scores = bh * sq * sk * ACC_BYTES
+    materialized = q_bytes + o_bytes + 2 * kv_bytes + 2 * scores
+    ideal = q_bytes + o_bytes + 2 * kv_bytes
+    return dict(flash=flash, materialized=materialized, ideal=ideal,
+                vmem_acc_bytes=(block_q * d + 2 * block_q * LANES)
+                * ACC_BYTES)

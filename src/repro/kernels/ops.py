@@ -28,7 +28,10 @@ def flash_attention(q, k, v, *, causal: bool = False,
         interpret = _auto_interpret()
     hq, hkv = q.shape[1], k.shape[1]
     if hkv != hq:
-        assert hq % hkv == 0
+        if hkv == 0 or hq % hkv:
+            raise ValueError(
+                f"GQA needs q heads ({hq}) to be a multiple of k/v heads "
+                f"({hkv})")
         rep = hq // hkv
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
@@ -56,3 +59,10 @@ def matmul_dispersed(a, b, *, block_m: int = 128, block_k: int = 512,
 
 
 hbm_traffic_model = _dg.hbm_traffic_model
+flash_traffic_model = _fa.hbm_traffic_model
+
+# Schedule geometries (grid + index maps shared with the pallas_calls) for
+# the instrumented traffic count — see repro.kernels.traffic.
+grouped_schedule = _dg.grouped_schedule
+dispersed_schedule = _dg.dispersed_schedule
+flash_schedule = _fa.flash_schedule

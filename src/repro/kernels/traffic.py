@@ -1,0 +1,92 @@
+"""Instrumented HBM traffic counting for Pallas schedules.
+
+The closed-form ``hbm_traffic_model`` in :mod:`repro.kernels.dispersed_gemm`
+is the paper's economics; this module is the *measurement* side of the
+roofline's model check: it walks a schedule's grid in Pallas TPU iteration
+order (row-major, last dimension fastest) and counts the HBM block
+transfers the pipeline actually issues, using the **same index-map
+lambdas** the ``pallas_call`` is built from.  A disagreement between this
+count and the closed form means one of them mis-states the schedule — the
+exact class of bug that let the dispersed-B term go dead.
+
+Counting semantics per :class:`Part` kind (documented because they ARE the
+measurement definition):
+
+  * ``"in"`` — an input block is fetched once per *run* of consecutive
+    grid steps mapping to the same block index (Pallas keeps a block
+    resident while its index is unchanged and refetches when it changes
+    back later).
+  * ``"out"`` — a pure output block is written exactly once (the final
+    writeback; intermediate pipeline copies of unchanged buffers carry no
+    model-relevant data and the closed form ignores them).
+  * ``"acc"`` — an HBM-resident accumulator (the dispersed schedule's
+    output tile) is *filled and spilled* once per run: every revisit
+    round-trips, which is precisely the paper's spill/fill traffic at
+    VMEM granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+KINDS = ("in", "out", "acc")
+
+
+@dataclasses.dataclass(frozen=True)
+class Part:
+    """One HBM-backed operand of a schedule: a block size in bytes, the
+    BlockSpec index map, and the counting kind (see module docstring)."""
+
+    name: str
+    block_bytes: int
+    index_map: Callable
+    kind: str
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"part {self.name!r}: kind must be one of {KINDS}, "
+                f"got {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A schedule's traffic geometry: the grid plus its operand parts."""
+
+    grid: tuple[int, ...]
+    parts: tuple[Part, ...]
+
+    def steps(self) -> int:
+        return int(np.prod(self.grid))
+
+
+def count(schedule: Schedule) -> dict[str, int]:
+    """Walk the grid and count bytes moved per part (+ ``"total"``).
+
+    The walk order is row-major with the last grid dimension fastest —
+    Pallas TPU's sequential iteration order, which is what makes
+    "consecutive steps with an unchanged block index" well defined.
+    """
+    runs = {p.name: 0 for p in schedule.parts}
+    seen: dict[str, set] = {p.name: set() for p in schedule.parts}
+    prev: dict[str, object] = {p.name: None for p in schedule.parts}
+    for idx in np.ndindex(*schedule.grid):
+        for p in schedule.parts:
+            block = p.index_map(*idx)
+            if block != prev[p.name]:
+                runs[p.name] += 1
+                prev[p.name] = block
+                seen[p.name].add(block)
+    out = {}
+    for p in schedule.parts:
+        if p.kind == "in":
+            out[p.name] = runs[p.name] * p.block_bytes
+        elif p.kind == "out":
+            out[p.name] = len(seen[p.name]) * p.block_bytes
+        else:                                   # "acc": fill + spill per run
+            out[p.name] = 2 * runs[p.name] * p.block_bytes
+    out["total"] = sum(out.values())
+    return out

@@ -281,6 +281,31 @@ def _l1_amat(ctx):
             + miss_rate * ctx.axis_grid("mem_latency"))
 
 
+@register("arithmetic_intensity", "derived",
+          "flops per instrumented HBM byte (flops / counted_bytes) — the "
+          "measured x-coordinate of a roofline point",
+          params=())
+def _arithmetic_intensity(ctx):
+    return ctx.counter("flops") / ctx.counter("counted_bytes")
+
+
+@register("model_arithmetic_intensity", "derived",
+          "flops per closed-form hbm_traffic_model byte "
+          "(flops / model_bytes) — the model x-coordinate of a "
+          "roofline point",
+          params=())
+def _model_arithmetic_intensity(ctx):
+    return ctx.counter("flops") / ctx.counter("model_bytes")
+
+
+@register("achieved_gflops", "derived",
+          "measured compute throughput (flops / us_per_call / 1e3) — the "
+          "y-coordinate of a roofline point",
+          params=())
+def _achieved_gflops(ctx):
+    return ctx.counter("flops") / ctx.counter("us_per_call") / 1e3
+
+
 # ---------------------------------------------------------------------------
 # Built-in model metrics: vectorized costmodel over the grid.
 # ---------------------------------------------------------------------------

@@ -28,8 +28,8 @@ def test_readme_quickstart_block_executes():
 
 
 def test_docs_pages_exist():
-    for page in ("api.md", "architecture.md", "folding.md", "metrics.md",
-                 "serving.md"):
+    for page in ("api.md", "architecture.md", "folding.md", "kernels.md",
+                 "metrics.md", "serving.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
 
@@ -39,6 +39,13 @@ def test_metrics_doc_blocks_execute():
     assert blocks, "docs/metrics.md lost its ```python examples"
     for block in blocks:
         exec(compile(block, "docs/metrics.md", "exec"), {})
+
+
+def test_kernels_doc_blocks_execute():
+    blocks = _python_blocks(ROOT / "docs" / "kernels.md")
+    assert blocks, "docs/kernels.md lost its ```python roofline example"
+    for block in blocks:
+        exec(compile(block, "docs/kernels.md", "exec"), {})
 
 
 def test_serving_doc_blocks_execute():

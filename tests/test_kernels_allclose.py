@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import dispersed_gemm, flash_attention, ops, ref
+from repro.kernels import dispersed_gemm, flash_attention, ops, ref, traffic
 
 
 def _rand(key, shape, dtype):
@@ -74,9 +74,23 @@ def test_gemm_dispersed_allclose(m, k, n):
                                rtol=2e-4, atol=2e-4)
 
 
+def test_gemm_grouped_bitwise_independent_of_working_set():
+    """The architectural result must not depend on the physical working
+    set (the paper's core invariant): the grouped kernel accumulates the
+    K reduction in the same f32 order for every W, so the outputs are
+    bit-identical, not just allclose."""
+    a = _rand(jax.random.PRNGKey(3), (256, 512), jnp.float32)
+    b = _rand(jax.random.PRNGKey(4), (512, 128), jnp.float32)
+    outs = [np.asarray(dispersed_gemm.matmul_grouped(
+        a, b, block_m=64, block_k=128, working_set=w, interpret=True))
+        for w in (1, 2, 4)]
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0], other)
+
+
 def test_traffic_model_monotone_in_working_set():
     prev = None
-    for w in (1, 2, 4, 8):
+    for w in (1, 2, 4, 8, 16, 32):
         t = dispersed_gemm.hbm_traffic_model(4096, 4096, 4096, block_m=128,
                                              block_k=512, working_set=w)
         assert t["grouped"] >= t["ideal"]
@@ -86,6 +100,82 @@ def test_traffic_model_monotone_in_working_set():
         if prev is not None:
             assert t["grouped"] <= prev       # more regs => less traffic
         prev = t["grouped"]
+
+
+def test_traffic_model_closed_forms_pinned():
+    """The exact byte counts, term by term — pins the dispersed-B fix
+    (B streams once: k*n input-width bytes, no dead nk factor) and the
+    f32-width accumulator spill/fill term."""
+    m, n, k, bm, bk, bpe = 256, 128, 512, 64, 128, 2
+    nm, nk = m // bm, k // bk
+    t = dispersed_gemm.hbm_traffic_model(m, n, k, block_m=bm, block_k=bk,
+                                         working_set=2, bytes_per_el=bpe)
+    assert t["grouped"] == (m * k + (nm // 2) * k * n + m * n) * bpe
+    assert t["dispersed"] == (m * k + k * n) * bpe + 2 * m * n * nk * 4
+    assert t["ideal"] == (m * k + k * n + m * n) * bpe
+    assert t["vmem_acc_bytes"] == 2 * bm * n * 4
+
+
+def test_traffic_model_rejects_what_the_kernel_rejects():
+    """Model legality == kernel legality: a working_set that does not
+    divide the m-tile count used to be silently floor-divided into an
+    undercounted ``groups``; both sides now raise the same ValueError."""
+    a = _rand(jax.random.PRNGKey(5), (256, 512), jnp.float32)
+    b = _rand(jax.random.PRNGKey(6), (512, 128), jnp.float32)
+    with pytest.raises(ValueError, match="working_set"):
+        dispersed_gemm.hbm_traffic_model(256, 128, 512, block_m=64,
+                                         block_k=128, working_set=3)
+    with pytest.raises(ValueError, match="working_set"):
+        dispersed_gemm.matmul_grouped(a, b, block_m=64, block_k=128,
+                                      working_set=3, interpret=True)
+    with pytest.raises(ValueError, match="working_set"):
+        dispersed_gemm.hbm_traffic_model(256, 128, 512, block_m=64,
+                                         block_k=128, working_set=0)
+
+
+@pytest.mark.parametrize("w", [1, 2, 4])
+def test_counted_traffic_matches_model_grouped(w):
+    kw = dict(block_m=64, block_k=128, working_set=w, bytes_per_el=2)
+    model = dispersed_gemm.hbm_traffic_model(256, 128, 512, **kw)
+    counted = traffic.count(
+        dispersed_gemm.grouped_schedule(256, 128, 512, **kw))
+    assert counted["total"] == model["grouped"]
+
+
+def test_counted_traffic_matches_model_dispersed_and_flash():
+    model = dispersed_gemm.hbm_traffic_model(
+        256, 128, 512, block_m=64, block_k=128, working_set=1)
+    counted = traffic.count(dispersed_gemm.dispersed_schedule(
+        256, 128, 512, block_m=64, block_k=128))
+    assert counted["total"] == model["dispersed"]
+    fm = flash_attention.hbm_traffic_model(
+        2, 2, 256, 256, 64, block_q=64, block_k=64)
+    fc = traffic.count(flash_attention.flash_schedule(
+        2, 2, 256, 256, 64, block_q=64, block_k=64))
+    assert fc["total"] == fm["flash"]
+    assert fm["flash"] >= fm["ideal"]
+    assert fm["materialized"] >= fm["flash"]   # fusing beats spilling S
+
+
+def test_kernel_shape_errors_name_the_dimension():
+    a = _rand(jax.random.PRNGKey(7), (200, 512), jnp.float32)
+    b = _rand(jax.random.PRNGKey(8), (512, 128), jnp.float32)
+    with pytest.raises(ValueError, match="m=200"):
+        dispersed_gemm.matmul_grouped(a, b, block_m=128, block_k=128,
+                                      interpret=True)
+    with pytest.raises(ValueError, match="m=200"):
+        dispersed_gemm.matmul_dispersed(a, b, block_m=128, block_k=128,
+                                        interpret=True)
+    bad_b = _rand(jax.random.PRNGKey(9), (256, 128), jnp.float32)
+    with pytest.raises(ValueError, match="k=512"):
+        dispersed_gemm.matmul_grouped(a[:128], bad_b, interpret=True)
+    q = _rand(jax.random.PRNGKey(10), (1, 2, 200, 64), jnp.float32)
+    with pytest.raises(ValueError, match="sq=200"):
+        flash_attention.flash_attention(q, q, q, block_q=128, block_k=128,
+                                        interpret=True)
+    with pytest.raises(ValueError, match="multiple"):
+        ops.flash_attention(q, q[:, :1][:, [0, 0, 0]], q[:, :3],
+                            interpret=True)
 
 
 @pytest.mark.parametrize("rows,d,dtype", [
