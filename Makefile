@@ -7,11 +7,18 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 
+# Fast-tier wall-clock budget (seconds).  The suite must stay within it so
+# a growing program population (the trace-from-model bridge multiplies
+# registered kernels) cannot silently inflate tier-1; `timeout` fails the
+# target loudly instead.  Sized from the measured full fast-tier wall on
+# CI-class hardware with headroom for cold JIT compiles.
+TEST_BUDGET_SECS ?= 900
+
 .PHONY: test-fast test bench bench-smoke serve-smoke roofline-smoke \
-	docs-check
+	network-smoke docs-check
 
 test-fast:
-	$(PYTEST) -x -q
+	timeout $(TEST_BUDGET_SECS) $(PYTEST) -x -q
 
 test:
 	$(PYTEST) -x -q -m ""
@@ -19,12 +26,28 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --json BENCH_core.json
 
-# Schema guard: the full front door (suites, --kernels subsetting, schema-4
+# Schema guard: the full front door (suites, --kernels subsetting, schema-5
 # JSON with metric metadata) on a 2-kernel subset in a couple of minutes.
-bench-smoke: serve-smoke roofline-smoke
+bench-smoke: serve-smoke roofline-smoke network-smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 	  --json BENCH_smoke.json --kernels dropout,gemv \
 	  fig2 table3 fig6 fig8 pareto
+
+# Network-bridge regression guard: whole registry models lowered through
+# repro.bridge on the truncation grid.  The JSON must record >0 rows, the
+# lowered-network summaries, and a compile count no larger than the number
+# of (shape bucket x L1 geometry) plan groups.
+network-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+	  --json BENCH_network_smoke.json --max-events 120 network_sweep
+	PYTHONPATH=$(PYTHONPATH) python -c "import json; \
+	  r = json.load(open('BENCH_network_smoke.json'))['suites']['network_sweep']; \
+	  x = r['extra']; \
+	  assert r['rows'] > 0 and x['networks'], r; \
+	  assert x['compiles'] <= x['plan_groups'], x; \
+	  print('network smoke OK:', r['rows'], 'rows,', len(x['networks']), \
+	        'models,', x['compiles'], 'compiles /', x['plan_groups'], \
+	        'plan groups')"
 
 # Serving-side schema guard: kv_dispersion + the serving SLO suite on the
 # smoke grid (2 hot-pool sizes, tiny scenario) under a tight event budget.

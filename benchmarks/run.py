@@ -13,7 +13,7 @@ set and say so.  ``make bench-smoke`` uses it to guard the JSON schema
 cheaply.  ``--max-events N`` forwards the legacy truncation budget the
 same way.
 
-``--json PATH`` writes a versioned report (``schema: 4``): per-suite
+``--json PATH`` writes a versioned report (``schema: 5``): per-suite
 wall-clock, XLA compile AND dispatch counts (the fused engine compiles once
 per (program-shape bucket, L1 geometry) — machine-latency grids are traced,
 so they add rows, not compiles), the sweep-axis metadata of every
@@ -24,7 +24,12 @@ machine), and — schema 4 — any per-suite ``json_extra()`` payload (the
 serving SLO suite exports its footprint-vs-latency Pareto fronts there;
 the roofline suite its per-point measured/model rows and equal-VMEM
 winners).  Suites exposing ``perf_stats()`` add their own Pallas
-compile/dispatch counts to the suite record.
+compile/dispatch counts to the suite record.  Schema 5 adds the
+``network_sweep`` suite: whole registry models lowered through
+``repro.bridge``, with per-model footprint/cycles/energy rows and the
+lowered-network summaries (kernels, units, instances) in its ``extra``
+payload, plus ``networks`` on any sweep meta that used the ``network``
+axis.
 """
 
 from __future__ import annotations
@@ -37,7 +42,7 @@ import time
 from repro import api, metrics
 from repro.core import simulator
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -53,6 +58,7 @@ _MODULES = {
     "serving_slo": "benchmarks.serving_slo",
     "ablation_sensitivity": "benchmarks.ablation_sensitivity",
     "roofline": "benchmarks.roofline",
+    "network_sweep": "benchmarks.network_sweep",
 }
 
 SUITES = tuple(_MODULES)
@@ -67,7 +73,8 @@ def _sweep_meta(history_slice: list[dict]) -> list[dict]:
     return [dict(axes=h["axes"], points=h["points"],
                  compiles=h["compiles"], dispatches=h["dispatches"],
                  fold=h["fold"], kernel_params=h["kernel_params"],
-                 derived=list(h.get("derived", ())))
+                 derived=list(h.get("derived", ())),
+                 **({"networks": h["networks"]} if "networks" in h else {}))
             for h in history_slice]
 
 

@@ -200,6 +200,15 @@ class Sweep:
     ``fold=None`` defers to the Session's fold policy.  ``max_events`` is
     the legacy truncation budget (forces ``fold`` off) — kept as an explicit
     escape hatch for smoke runs; prefer folding.
+
+    ``network`` names models from :mod:`repro.configs.registry`: each is
+    lowered through :mod:`repro.bridge` (layer shapes -> deduplicated
+    ``net:*`` kernels, registered on first use) and the union of lowered
+    kernels joins the ``kernel`` axis — so one ``Sweep(network=(...,))``
+    plans a whole model mix as a single planned run.  The lowered
+    per-layer records ride on the result's ``meta["networks"]``;
+    :func:`repro.bridge.network_report` folds per-kernel counters back
+    into per-model totals.
     """
 
     kernels: tuple[str, ...] = ()
@@ -215,10 +224,21 @@ class Sweep:
     kernel_params: str | dict = "paper"
     fold: bool | None = None
     max_events: int | None = None
+    network: tuple[str, ...] = ()
 
     def __post_init__(self):
         fix = object.__setattr__
-        fix(self, "kernels", tuple(_as_tuple(self.kernels)))
+        fix(self, "network",
+            tuple(_as_tuple(self.network)) if self.network else ())
+        kernels = list(_as_tuple(self.kernels))
+        lowered = ()
+        if self.network:
+            from repro.bridge import lower_network
+            lowered = tuple(lower_network(m) for m in self.network)
+            for net in lowered:
+                kernels += [k for k in net.kernels if k not in kernels]
+        fix(self, "_lowered", lowered)    # companion record, not a field
+        fix(self, "kernels", tuple(kernels))
         if not self.kernels:
             raise ValueError("Sweep needs at least one kernel name")
         fix(self, "capacity", tuple(int(c) for c in _as_tuple(self.capacity)))
@@ -837,6 +857,9 @@ class Session:
                            else dict(sweep.kernel_params)),
             fold=fold,
         )
+        lowered = getattr(sweep, "_lowered", ())
+        if lowered:
+            meta["networks"] = [net.summary() for net in lowered]
         self.history.append(meta)
         return SweepResult(axes, data, meta)
 

@@ -239,6 +239,103 @@ def detect_super_periods(program: Program):
 
 
 # ---------------------------------------------------------------------------
+# Stream analysis helpers (module level so :func:`diagnose` can report the
+# same judgements the planner makes).
+# ---------------------------------------------------------------------------
+
+
+def _lines_in(addr: np.ndarray, lo: int, hi: int) -> int:
+    a = addr[lo:hi]
+    a = a[a >= 0]
+    return len(np.unique(a >> 5)) if a.size else 0
+
+
+def _new_lines_steady(addr: np.ndarray, s: int, P: int, reps: int) -> bool:
+    """True when super-periods 1..k touch a constant number of lines
+    never seen in earlier super-periods (translation-invariant pattern;
+    period 0 owns the first-touch of loop-invariant data)."""
+    seen: set = set()
+    news = []
+    for sp in range(min(8, reps)):
+        a = addr[s + sp * P: s + (sp + 1) * P]
+        cur = set((a[a >= 0] >> 5).tolist())
+        news.append(len(cur - seen))
+        seen |= cur
+    return len(set(news[1:])) <= 1
+
+
+def reuse_gaps_stationary(addr: np.ndarray, s: int, e: int, P: int,
+                          start: int = 2) -> bool:
+    """True when the multiset of cross-period line-reuse gaps landing in
+    each super-period is the same for every period (first ``start``
+    periods own first-touch transients and are exempt).
+
+    This is the translation-invariance the A == B certificate silently
+    assumes.  Two streams walking one region at different line rates
+    (e.g. a stride-64 load overtaken by a stride-32 store) re-touch
+    line ``2k`` at periods ``k`` and ``2k - 1``: every per-line gap is
+    unique, but the gap *arriving* at period ``p`` grows with ``p``, so
+    the reuse distance crosses the L1 reach somewhere inside the
+    extrapolated region — the two measured periods still agree while
+    the steady state they certify is not the block's.  Such folds stay
+    honest: folded for speed, never certified exact."""
+    a = addr[s:e]
+    idx = np.flatnonzero(a >= 0)
+    if idx.size == 0:
+        return True
+    lines = (a[idx] >> 5).astype(np.int64)
+    per = idx // P
+    order = np.argsort(lines, kind="stable")   # trace order within line
+    l_s, p_s = lines[order], per[order]
+    cross = (l_s[1:] == l_s[:-1]) & (p_s[1:] > p_s[:-1])
+    p2 = p_s[1:][cross]                        # period the reuse lands in
+    gap = (p_s[1:] - p_s[:-1])[cross]
+    keep = p2 >= start
+    p2, gap = p2[keep], gap[keep]
+    nper = (e - s) // P
+    if nper <= start:
+        return True
+    if p2.size == 0:
+        return True
+    counts = np.bincount(p2, minlength=nper)[start:]
+    if (counts != counts[0]).any():
+        return False
+    if counts[0] == 0:
+        return True
+    o = np.lexsort((gap, p2))
+    sig = gap[o].reshape(nper - start, counts[0])
+    return bool((sig == sig[0]).all())
+
+
+def _choose_unit(addr: np.ndarray, nd: "_Node", warm_lines: int,
+                 units: tuple):
+    """Pick the measurement unit for a repeat block, exactly as the planner
+    does: the unit whose warm-up + 2 measured super-periods keeps the fewest
+    rows, with steady new-line units strongly preferred.  Returns
+    ``(unit, reps, warm, key)`` or None when no unit leaves >= 1
+    extrapolated period."""
+    if nd.super_:
+        u, reps, warm = 1, nd.cnt, max(1, nd.warm)
+        kept = (warm + 2) * nd.bl
+        return ((u, reps, warm, (False, kept))
+                if reps >= warm + 3 else None)
+    chosen = None
+    for u in units:
+        if nd.cnt % u:
+            continue
+        reps = nd.cnt // u
+        per_sp = _lines_in(addr, nd.s, nd.s + u * nd.bl)
+        warm = max(1, -(-warm_lines // per_sp)) if per_sp else 1
+        if reps >= warm + 3:                # >=1 extrapolated period
+            steady_u = _new_lines_steady(addr, nd.s, u * nd.bl, reps)
+            kept = (warm + 2) * u * nd.bl
+            key = (not steady_u, kept)      # steady units first
+            if chosen is None or key < chosen[3]:
+                chosen = (u, reps, warm, key)
+    return chosen
+
+
+# ---------------------------------------------------------------------------
 # Plan construction.
 # ---------------------------------------------------------------------------
 
@@ -256,65 +353,6 @@ def _plan_once(program: Program, nodes: list, warm_lines: int, units: tuple,
     state = {"folds": 0, "supers": 0}
     dropped: list[tuple[int, int]] = []     # extrapolated (unkept) regions
 
-    def lines_in(lo, hi) -> int:
-        a = addr[lo:hi]
-        a = a[a >= 0]
-        return len(np.unique(a >> 5)) if a.size else 0
-
-    def new_lines_steady(s, P, reps) -> bool:
-        """True when super-periods 1..k touch a constant number of lines
-        never seen in earlier super-periods (translation-invariant pattern;
-        period 0 owns the first-touch of loop-invariant data)."""
-        seen: set = set()
-        news = []
-        for sp in range(min(8, reps)):
-            a = addr[s + sp * P: s + (sp + 1) * P]
-            cur = set((a[a >= 0] >> 5).tolist())
-            news.append(len(cur - seen))
-            seen |= cur
-        return len(set(news[1:])) <= 1
-
-    def reuse_gaps_stationary(s, e, P, start=2) -> bool:
-        """True when the multiset of cross-period line-reuse gaps landing in
-        each super-period is the same for every period (first ``start``
-        periods own first-touch transients and are exempt).
-
-        This is the translation-invariance the A == B certificate silently
-        assumes.  Two streams walking one region at different line rates
-        (e.g. a stride-64 load overtaken by a stride-32 store) re-touch
-        line ``2k`` at periods ``k`` and ``2k - 1``: every per-line gap is
-        unique, but the gap *arriving* at period ``p`` grows with ``p``, so
-        the reuse distance crosses the L1 reach somewhere inside the
-        extrapolated region — the two measured periods still agree while
-        the steady state they certify is not the block's.  Such folds stay
-        honest: folded for speed, never certified exact."""
-        a = addr[s:e]
-        idx = np.flatnonzero(a >= 0)
-        if idx.size == 0:
-            return True
-        lines = (a[idx] >> 5).astype(np.int64)
-        per = idx // P
-        order = np.argsort(lines, kind="stable")   # trace order within line
-        l_s, p_s = lines[order], per[order]
-        cross = (l_s[1:] == l_s[:-1]) & (p_s[1:] > p_s[:-1])
-        p2 = p_s[1:][cross]                        # period the reuse lands in
-        gap = (p_s[1:] - p_s[:-1])[cross]
-        keep = p2 >= start
-        p2, gap = p2[keep], gap[keep]
-        nper = (e - s) // P
-        if nper <= start:
-            return True
-        if p2.size == 0:
-            return True
-        counts = np.bincount(p2, minlength=nper)[start:]
-        if (counts != counts[0]).any():
-            return False
-        if counts[0] == 0:
-            return True
-        o = np.lexsort((gap, p2))
-        sig = gap[o].reshape(nper - start, counts[0])
-        return bool((sig == sig[0]).all())
-
     def emit_range(lo, hi, children, w, wa, wb, in_fold):
         cur = lo
         for ch in children:
@@ -326,35 +364,12 @@ def _plan_once(program: Program, nodes: list, warm_lines: int, units: tuple,
             ranges.append((cur, hi, w, wa, wb))
 
     def emit_node(nd, w, wa, wb, in_fold):
-        if nd.super_:
-            # Synthesised super-period: the period length IS the detected
-            # k-block span and the warm-up came from the state snapshots.
-            u, reps, warm = 1, nd.cnt, max(1, nd.warm)
-            kept = (warm + 2) * nd.bl
-            chosen = ((u, reps, warm, (False, kept))
-                      if reps >= warm + 3 else None)
-        else:
-            # Pick the unit whose warm-up + 2 measured super-periods keeps
-            # the fewest rows (larger units need fewer warm-up periods when
-            # strides are sub-cacheline, smaller units waste less on coarse
-            # strides).  Units whose early super-periods touch a *constant*
-            # number of distinct lines are strongly preferred: a varying
-            # count means a sub-line access pattern longer than the unit
-            # (e.g. a 4-byte store stream crossing a cacheline every few
-            # iterations), which the measured period cannot represent.
-            chosen = None
-            for u in units:
-                if nd.cnt % u:
-                    continue
-                reps = nd.cnt // u
-                per_sp = lines_in(nd.s, nd.s + u * nd.bl)
-                warm = max(1, -(-warm_lines // per_sp)) if per_sp else 1
-                if reps >= warm + 3:                # >=1 extrapolated period
-                    steady_u = new_lines_steady(nd.s, u * nd.bl, reps)
-                    kept = (warm + 2) * u * nd.bl
-                    key = (not steady_u, kept)      # steady units first
-                    if chosen is None or key < chosen[3]:
-                        chosen = (u, reps, warm, key)
+        # Unit choice (see _choose_unit): synthesised super-periods use the
+        # detected k-block span and snapshot warm-up; plain blocks pick the
+        # unit whose warm-up + 2 measured super-periods keeps the fewest
+        # rows, preferring units whose early super-periods touch a constant
+        # number of distinct lines.
+        chosen = _choose_unit(addr, nd, warm_lines, units)
         if chosen is None or chosen[3][1] >= 0.95 * (nd.e - nd.s):
             emit_range(nd.s, nd.e, nd.children, w, wa, wb, in_fold)
             return
@@ -365,7 +380,7 @@ def _plan_once(program: Program, nodes: list, warm_lines: int, units: tuple,
         P = u * nd.bl
         rest = reps - warm - 2
         dropped.append((nd.s + (warm + 2) * P, nd.e))
-        if not reuse_gaps_stationary(nd.s, nd.e, P):
+        if not reuse_gaps_stationary(addr, nd.s, nd.e, P):
             state["non_stationary"] = True
         for sp in range(warm + 2):
             lo = nd.s + sp * P
@@ -446,3 +461,45 @@ def plan(program: Program, warm_lines: int = 1024,
     if exact is not None and exact.certifiable:
         return exact
     return nested
+
+
+def diagnose(program: Program, warm_lines: int = 1024,
+             units: tuple = (8, 4, 2, 1)) -> list[dict]:
+    """Per-block fold diagnostics: why each repeat block does or does not
+    certify.
+
+    For every top-level repeat block and every detected multi-block
+    super-period, report the planner's unit choice and the two stream
+    invariants the A == B certificate rests on:
+
+    - ``stationary``: cross-period line-reuse gaps are translation
+      invariant (:func:`reuse_gaps_stationary`) — False is exactly the
+      multi-rate-stream condition that keeps a fold honest but uncertified
+      (somier's within-step force/integrate streams are the canonical
+      case).
+    - ``steady_new_lines``: successive super-periods touch a constant
+      number of never-seen lines (:func:`_new_lines_steady`).
+
+    ``foldable`` is False when no unit leaves at least one extrapolated
+    period after the warm-up (the block is too short for its warm-up, e.g.
+    somier at the paper's 2 time steps vs the detector's 4-period minimum).
+    The list is ordered by block start row.
+    """
+    addr = program.addr
+    base = [_Node(s, bl, cnt, []) for s, bl, cnt in program.repeats]
+    roots = _build_tree(base)
+    out = []
+    for nd in roots + detect_super_periods(program):
+        chosen = _choose_unit(addr, nd, warm_lines, units)
+        rec = dict(start=int(nd.s), end=int(nd.e), block_len=int(nd.bl),
+                   count=int(nd.cnt), super_period=bool(nd.super_),
+                   foldable=chosen is not None)
+        if chosen is not None:
+            u, reps, warm, _ = chosen
+            P = u * nd.bl
+            rec.update(
+                unit=int(u), reps=int(reps), warm=int(warm),
+                stationary=reuse_gaps_stationary(addr, nd.s, nd.e, P),
+                steady_new_lines=_new_lines_steady(addr, nd.s, P, reps))
+        out.append(rec)
+    return sorted(out, key=lambda r: (r["start"], r["super_period"]))

@@ -60,13 +60,19 @@ BENCHMARKS: BenchmarkRegistry = BenchmarkRegistry()
 
 def register_benchmark(name: str, *, domain: str, paper_params: dict,
                        reduced_params: dict, table2: str = "",
-                       scalar_cost: Callable[..., ScalarCost] | None = None):
+                       scalar_cost: Callable[..., ScalarCost] | None = None,
+                       exist_ok: bool = False):
     """Decorator registering a kernel's ``build`` function as a Benchmark.
 
     ``scalar_cost`` defaults to the decorated module's ``scalar_cost``
     function, resolved lazily (kernel modules conventionally define it below
     ``build``).  A module may stack the decorator to register several named
     configurations of one build function (see ``rvv.gemm``).
+
+    ``exist_ok=True`` makes re-registration of the same name idempotent (the
+    first registration wins); the trace-from-model bridge uses this so that
+    lowering the same network twice — or two networks sharing a layer shape —
+    does not raise.  Hand-written kernels keep the default duplicate check.
     """
     def deco(build: Callable[..., Built]) -> Callable[..., Built]:
         cost = scalar_cost
@@ -74,6 +80,8 @@ def register_benchmark(name: str, *, domain: str, paper_params: dict,
             mod = sys.modules[build.__module__]
             cost = lambda **kw: mod.scalar_cost(**kw)  # noqa: E731
         if name in BENCHMARKS:
+            if exist_ok:
+                return build
             raise ValueError(f"benchmark {name!r} registered twice")
         BENCHMARKS[name] = Benchmark(name, domain, build, cost,
                                      dict(paper_params), dict(reduced_params),

@@ -22,6 +22,8 @@ NAMES = ("pathfinder", "jacobi2d", "somier", "gemv", "dropout",
                                     "names": ["dropout", "gemv"]}),
     ("benchmarks.vmem_dispersion", {}),
     ("benchmarks.kv_dispersion", {"steps": 150}),
+    ("benchmarks.network_sweep", {"models": ("granite-8b",), "caps": (4, 8),
+                                  "l1_kbytes": (4,), "max_events": 120}),
     # The machine-latency grid is traced (no per-machine rebuilds), but the
     # fast suite already exercises this run in tests/test_machine_grid.py,
     # so the harness duplicate stays out of the default selection.
@@ -37,7 +39,7 @@ def test_suite_produces_rows(mod, kw):
 
 
 def test_run_json_schema(tmp_path):
-    """The front door's --json report: schema 4, --kernels subsetting, the
+    """The front door's --json report: schema 5, --kernels subsetting, the
     metric-registry catalog, and per-sweep derived-metric metadata."""
     import json
 
@@ -47,7 +49,7 @@ def test_run_json_schema(tmp_path):
                       "--max-events", "12000", "fig2", "fig6"])
     assert rc == 0
     rep = json.loads(out.read_text())
-    assert rep["schema"] == 4
+    assert rep["schema"] == 5
     assert rep["metrics"]["speedup"]["kind"] == "relational"
     assert rep["metrics"]["application_power"]["kind"] == "model"
     fig6 = rep["suites"]["fig6"]

@@ -1,0 +1,263 @@
+"""Trace-from-model bridge: certification truth table + lowering laws.
+
+Three tiers, mirroring the hand-written kernels' test structure:
+
+1. A fold-certification truth table per (model, layer kind): every tile
+   program the bridge emits for a registry model must carry a certifiable
+   fold plan at the 4 KB pin geometry — the whole point of way-span
+   padding.  The table also pins WHICH layer kinds each architecture
+   lowers to (attention-only, Mamba scan, hybrid, MoE).
+2. Property tests (seeded; hypothesis widens the shapes when available):
+   the ``repeat``-stride emission is row-for-row identical to a naively
+   unrolled emission with literal addresses, and signature-based dedup is
+   lawful — equal signatures always rebuild the identical trace (so
+   merged layers share counters by construction) while distinct
+   signatures never share a kernel name.
+3. One end-to-end ``Session.run``: >= 3 registry models lowered through
+   the ``network`` axis into a single >= 100-point sweep whose compile
+   count is pinned by the (shape bucket x L1 geometry) plan groups.
+
+Bridge lowering never runs at module import time: the conformance matrix
+in test_golden_counters parametrizes over ``rvv.BENCHMARKS`` at
+collection, and registering ``net:*`` kernels that early would widen it.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except Exception:                                     # pragma: no cover
+    HAVE_HYP = False
+
+from repro import api
+from repro.core import folding, isa, simulator
+
+# The 4 KB direct-er pin geometry (64 sets x 2 ways) used across the
+# docs' certification examples; plan() warm-up derives from it.
+PIN_SETS, PIN_WAYS = 64, 2
+PIN_WARM = folding.warm_lines_for(PIN_SETS, PIN_WAYS)
+
+# Program columns that define the instruction stream (everything except
+# the memory image and periodicity metadata).
+ROW_FIELDS = ("op", "vd", "vs1", "vs2", "addr", "imm", "cost_override")
+
+
+def _rows(program):
+    return {f: getattr(program, f) for f in ROW_FIELDS}
+
+
+def _assert_same_rows(a, b):
+    for f in ROW_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# 1. Certification truth table per (model, layer kind).
+# ---------------------------------------------------------------------------
+
+# Which layer kinds each architecture must lower to, and whether the
+# representative tile program of that kind certifies at the pin geometry.
+# All True today — way-span padding is the lowering contract; a False here
+# would mean a generated program regressed to somier-style inexactness.
+CERT_TRUTH = {
+    "granite-8b": {"gemm": True, "attn": True},
+    "falcon-mamba-7b": {"gemm": True, "scan": True},
+    "recurrentgemma-2b": {"gemm": True, "attn": True, "scan": True},
+    "deepseek-v2-lite-16b": {"gemm": True, "attn": True},
+}
+
+_NETS: dict = {}
+_PROGRAMS: dict = {}
+
+
+def _lowered(model):
+    if model not in _NETS:
+        from repro import bridge
+        _NETS[model] = bridge.lower_network(model)
+    return _NETS[model]
+
+
+def _tile_program(unit):
+    if unit.kernel not in _PROGRAMS:
+        from repro import bridge
+        build = {"gemm": bridge.build_gemm, "attn": bridge.build_attn,
+                 "scan": bridge.build_scan}[unit.kind]
+        _PROGRAMS[unit.kernel] = build(**unit.params).program
+    return _PROGRAMS[unit.kernel]
+
+
+@pytest.mark.parametrize("model", sorted(CERT_TRUTH))
+def test_certification_truth_table(model):
+    net = _lowered(model)
+    by_kind: dict = {}
+    for u in net.units:
+        by_kind.setdefault(u.kind, u)
+    assert set(by_kind) == set(CERT_TRUTH[model]), model
+    for kind, want in sorted(CERT_TRUTH[model].items()):
+        p = _tile_program(by_kind[kind])
+        plan = folding.plan(p, warm_lines=PIN_WARM)
+        got = plan is not None and plan.certifiable
+        assert got == want, (model, kind, by_kind[kind].kernel)
+
+
+def test_lowering_is_deduplicated_and_scaled():
+    """Dedup invariants the network report relies on: one unit per unique
+    signature, instance counts preserved, positive macro factors."""
+    net = _lowered("deepseek-v2-lite-16b")
+    sigs = [(u.kind,) + u.shape for u in net.units]
+    assert len(sigs) == len(set(sigs))
+    assert len(net.kernels) == len(net.units) < net.num_instances
+    assert all(u.macro_factor > 0 for u in net.units)
+    # merged labels stay attributable: every unit keeps its layer labels
+    assert all(u.labels for u in net.units)
+
+
+# ---------------------------------------------------------------------------
+# 2. Property: repeat emission == naive unrolled emission.
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [(1, 1, 1, 8), (2, 2, 16, 16), (3, 1, 7, 24), (2, 3, 5, 8),
+               (4, 2, 33, 16)]
+SCAN_SHAPES = [(1, 8), (3, 64), (7, 24), (12, 128)]
+
+
+def _check_gemm_unroll(tiles, mt, k, n):
+    from repro import bridge
+    rolled = bridge.build_gemm(tiles=tiles, mt=mt, k=k, n=n)
+    flat = bridge.build_gemm(tiles=tiles, mt=mt, k=k, n=n, unroll=True)
+    _assert_same_rows(rolled.program, flat.program)
+    np.testing.assert_array_equal(rolled.program.memory, flat.program.memory)
+    assert not flat.program.repeats
+    if max(tiles, mt, k, n // isa.VL_ELEMS) > 1:   # count-1 loops drop out
+        assert rolled.program.repeats
+
+
+def _check_scan_unroll(steps, width):
+    from repro import bridge
+    rolled = bridge.build_scan(steps=steps, width=width)
+    flat = bridge.build_scan(steps=steps, width=width, unroll=True)
+    _assert_same_rows(rolled.program, flat.program)
+    np.testing.assert_array_equal(rolled.program.memory, flat.program.memory)
+    assert not flat.program.repeats
+    if max(steps, width // isa.VL_ELEMS) > 1:
+        assert rolled.program.repeats
+
+
+@pytest.mark.parametrize("tiles,mt,k,n", GEMM_SHAPES)
+def test_gemm_repeat_equals_unrolled(tiles, mt, k, n):
+    _check_gemm_unroll(tiles, mt, k, n)
+
+
+@pytest.mark.parametrize("steps,width", SCAN_SHAPES)
+def test_scan_repeat_equals_unrolled(steps, width):
+    _check_scan_unroll(steps, width)
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(tiles=st.integers(1, 4), mt=st.integers(1, 3),
+           k=st.integers(1, 40), n=st.integers(1, 4).map(lambda c: 8 * c))
+    def test_gemm_repeat_equals_unrolled_hyp(tiles, mt, k, n):
+        _check_gemm_unroll(tiles, mt, k, n)
+
+    @settings(max_examples=25, deadline=None)
+    @given(steps=st.integers(1, 10),
+           width=st.integers(1, 24).map(lambda c: 8 * c))
+    def test_scan_repeat_equals_unrolled_hyp(steps, width):
+        _check_scan_unroll(steps, width)
+
+
+# ---------------------------------------------------------------------------
+# 2b. Property: signature dedup is lawful.
+# ---------------------------------------------------------------------------
+
+def _random_op(g):
+    from repro.bridge import LayerOp
+    kind = ("gemm", "attn", "scan")[g.integers(3)]
+    if kind == "gemm":
+        shape = (int(g.integers(1, 8192)), int(g.integers(1, 8192)))
+    elif kind == "attn":
+        shape = (int(g.integers(1, 64)), int(g.integers(8, 256)))
+    else:
+        shape = (int(g.integers(1, 16384)),)
+    return LayerOp(kind, f"layer{g.integers(1000)}", shape,
+                   int(g.integers(1, 64)))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dedup_never_merges_different_programs(seed):
+    """tile_for is a pure function of the signature: ops with equal
+    signatures map to one kernel name AND identical build kwargs (so the
+    registered program — hence its counters — is unique per name), while
+    ops with different signatures never share a name."""
+    from repro.bridge import lower
+    g = np.random.default_rng(seed)
+    ops = [_random_op(g) for _ in range(40)]
+    by_name: dict = {}
+    for op in ops:
+        name, kwargs, macro = lower.tile_for(op)
+        assert macro > 0
+        prev = by_name.setdefault(name, (op.signature, kwargs))
+        assert prev == (op.signature, kwargs), name
+    names = {op.signature: lower.tile_for(op)[0] for op in ops}
+    assert len(set(names.values())) == len(names)
+
+
+def test_registered_builds_are_deterministic():
+    """Rebuilding from a unit's stored kwargs reproduces the trace
+    bit-for-bit — the foundation of `exist_ok` re-registration: whichever
+    model registers a shared-signature kernel first, the program (and so
+    every counter) is the same."""
+    net = _lowered("granite-8b")
+    u = next(u for u in net.units if u.kind == "gemm")
+    from repro import bridge
+    a = bridge.build_gemm(**u.params).program
+    b = bridge.build_gemm(**u.params).program
+    _assert_same_rows(a, b)
+    np.testing.assert_array_equal(a.memory, b.memory)
+
+
+# ---------------------------------------------------------------------------
+# 3. End-to-end: >= 3 models, one Session.run, compile count pinned.
+# ---------------------------------------------------------------------------
+
+def test_network_axis_plans_models_as_one_sweep():
+    ses = api.Session()
+    sweep = api.Sweep(
+        network=("granite-8b", "qwen3-8b", "falcon-mamba-7b"),
+        capacity=(3, 4, 8, 32), policy=("fifo", "lru"),
+        l1_geometry=((PIN_SETS, PIN_WAYS),), fold=True)
+    # lowering happened in __post_init__: the kernel axis is the union of
+    # the three models' deduplicated net:* kernels
+    assert len(sweep.kernels) >= 10
+    assert all(k.startswith("net:") for k in sweep.kernels)
+    res = ses.run(sweep)
+
+    assert res.meta["points"] >= 100
+    assert [n["model"] for n in res.meta["networks"]] == list(sweep.network)
+    for n in res.meta["networks"]:
+        assert n["instances"] > n["units"] > 0
+
+    # The compile pin: programs grow with the model mix, compiles stay at
+    # (shape bucket x L1 geometry).  Engine executables are cached per
+    # process, so <=; the group count itself is the structural bound.
+    groups = {(g["l1_geometry"], g["bucket"]) for g in res.meta["plan"]}
+    planned = {k for g in res.meta["plan"] for k in g["kernels"]}
+    assert planned == set(sweep.kernels)
+    assert res.meta["compiles"] <= len(groups) <= 4
+    assert res.meta["dispatches"] >= len(sweep.kernels)
+
+    # every point folded AND certified exact — the padded-plane contract
+    assert res.data["fold_exact"].all()
+
+    # report rows: one per (model, non-kernel point), monotone footprint
+    from repro import bridge
+    rows = bridge.network_report(res.derive("scaled_cycles"),
+                                 list(getattr(sweep, "_lowered")))
+    assert len(rows) == 3 * (res.meta["points"] // len(sweep.kernels))
+    assert all(r["scaled_cycles_total"] > 0 for r in rows)
+    assert all(r["footprint_bytes"] == r["capacity"] * 32 for r in rows)

@@ -28,8 +28,8 @@ def test_readme_quickstart_block_executes():
 
 
 def test_docs_pages_exist():
-    for page in ("api.md", "architecture.md", "folding.md", "kernels.md",
-                 "metrics.md", "serving.md"):
+    for page in ("api.md", "architecture.md", "bridge.md", "folding.md",
+                 "kernels.md", "metrics.md", "serving.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
 
@@ -53,6 +53,13 @@ def test_serving_doc_blocks_execute():
     assert blocks, "docs/serving.md lost its ```python example"
     for block in blocks:
         exec(compile(block, "docs/serving.md", "exec"), {})
+
+
+def test_bridge_doc_blocks_execute():
+    blocks = _python_blocks(ROOT / "docs" / "bridge.md")
+    assert blocks, "docs/bridge.md lost its ```python lowering examples"
+    for block in blocks:
+        exec(compile(block, "docs/bridge.md", "exec"), {})
 
 
 def test_examples_quickstart_runs():

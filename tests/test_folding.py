@@ -247,6 +247,51 @@ def test_exact_outer_replan_is_flagged():
 
 
 # ---------------------------------------------------------------------------
+# somier: the carried-over within-step certification item, made executable.
+# ---------------------------------------------------------------------------
+
+
+def test_somier_paper_uncertified_with_diagnosis():
+    """Paper-size somier (2 time steps) stays HONESTLY uncertified, and
+    ``folding.diagnose`` pins exactly which invariant fails.
+
+    The per-step force/integrate blocks are individually fine — every
+    top-level block is foldable with *stationary* cross-period reuse gaps
+    (the multi-rate streams inside one step are translation-invariant at
+    the i-loop level).  What fails is CROSS-step: folding a step's i-loop
+    drops iterations whose lines the next step re-touches, so the runtime
+    A == B check cannot see the post-loop divergence, and the step-level
+    super-period detector cannot rescue it because 2 steps give it only
+    m = 4 adjacent blocks — below the >= 4 *periods* (8 blocks at k = 2)
+    it requires.  See test_somier_step_super_period_certifies_at_4_steps
+    for the converse."""
+    p = somier.build(**somier.PAPER).program
+    diags = [d for d in folding.diagnose(p) if not d["super_period"]]
+    assert diags and all(d["foldable"] for d in diags)
+    assert all(d["stationary"] for d in diags), (
+        "within-step streams became non-stationary; update the somier "
+        "truth-table story")
+    assert folding.detect_super_periods(p) == []    # 2 steps < 4 periods
+    plan = folding.plan(p)
+    assert plan is not None and not plan.certifiable
+
+
+def test_somier_step_super_period_certifies_at_4_steps():
+    """With >= 4 time steps the state-snapshot detector finds the whole
+    force+integrate step (k = 2 blocks) as a super-period and plan()
+    certifies it — bit-identical to the unfolded run.  This is the
+    regression guard for the somier ROADMAP item: the paper-size pin above
+    is a detector-minimum limitation, not a folding-engine bug."""
+    p = somier.build(n=8, steps=4).program
+    sup = folding.detect_super_periods(p)
+    assert len(sup) == 1 and sup[0].cnt >= 4
+    plan = folding.plan(p)
+    assert plan is not None and plan.certifiable
+    assert plan.num_super_periods == 1
+    _assert_fold_exact(p, caps=(3, 8))
+
+
+# ---------------------------------------------------------------------------
 # Regression pin: fold_exact truth per kernel must not silently flip.
 # ---------------------------------------------------------------------------
 
@@ -254,10 +299,12 @@ def test_exact_outer_replan_is_flagged():
 # dropout/gemv stream steadily and certify exact; jacobi2d's ping-pong time
 # loop certifies through the state-snapshot super-period detector (k = 2
 # steps, exact-outer plan); conv2d_batched/mha certify their set-congruent
-# batch/head loops.  somier stays HONESTLY inexact: its steady state spans
-# a whole time step (force + integrate share arrays at different line
-# rates, non-stationary reuse gaps) and the paper's 2 steps never give the
-# step-level detector the >= 4 periods it needs.  A folding change that
+# batch/head loops.  somier stays HONESTLY inexact — the somier tests
+# above pin the diagnosis: each force/integrate block is individually
+# stationary, but folding one step drops iterations whose lines the NEXT
+# step re-touches (post-loop divergence), and the paper's 2 steps give the
+# step-level detector fewer than the >= 4 periods it needs (steps >= 4
+# certifies through the whole-step super-period).  A folding change that
 # flips any of these silently is a certification bug.  This table is
 # mirrored in docs/folding.md — keep both in sync.
 FOLD_EXACT_TRUTH = {

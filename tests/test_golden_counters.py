@@ -138,3 +138,62 @@ def test_conformance_counters_machine_invariant():
     grid = _sim_grid("densenet121_l105")
     for k in DIFF_COUNTERS:
         assert (grid[k] == grid[k][..., :1]).all(), k
+
+
+# ---------------------------------------------------------------------------
+# Bridge-lowered layer families: the same differential conformance, for the
+# generated programs.  One representative per layer family (gemm / attn /
+# scan) x two shapes, at the same three (capacity, policy, machine) points
+# including the OPT/Belady one — every program the trace-from-model bridge
+# emits must be as trustworthy as the hand-written kernels.
+# ---------------------------------------------------------------------------
+
+BRIDGE_REPRS = {
+    "bridge_gemm_16x16": dict(kind="gemm", tiles=2, mt=2, k=16, n=16),
+    "bridge_gemm_32x24": dict(kind="gemm", tiles=2, mt=1, k=32, n=24),
+    "bridge_attn_h2d16": dict(kind="attn", seq=16, d=16, bc=16, heads=2),
+    "bridge_attn_h1d16": dict(kind="attn", seq=16, d=16, bc=8, heads=1),
+    "bridge_scan_w64": dict(kind="scan", steps=6, width=64),
+    "bridge_scan_w128": dict(kind="scan", steps=8, width=128),
+}
+
+_BRIDGE_PROGRAMS = {}
+
+
+def _bridge_program(name):
+    if name not in _BRIDGE_PROGRAMS:
+        from repro import bridge
+        spec = dict(BRIDGE_REPRS[name])
+        build = {"gemm": bridge.build_gemm, "attn": bridge.build_attn,
+                 "scan": bridge.build_scan}[spec.pop("kind")]
+        _BRIDGE_PROGRAMS[name] = build(**spec).program
+    return _BRIDGE_PROGRAMS[name]
+
+
+_BRIDGE_SIM_GRID = {}
+
+
+def _bridge_sim_grid(name):
+    """One fused (C=3, M=3) dispatch per bridge program, diagonal points."""
+    if name not in _BRIDGE_SIM_GRID:
+        sweep = simulator.SweepConfig(
+            np.asarray([c for c, _, _ in CONF_POINTS], np.int32),
+            np.asarray([p for _, p, _ in CONF_POINTS], np.int32),
+            np.zeros(len(CONF_POINTS), bool))
+        machines = simulator.MachineSweep.from_params(
+            [m for _, _, m in CONF_POINTS])
+        prep = simulator.prepare(_bridge_program(name))
+        _BRIDGE_SIM_GRID[name] = simulator.simulate_grid(
+            [prep], sweep, machines)
+    return _BRIDGE_SIM_GRID[name]
+
+
+@pytest.mark.parametrize("point", range(len(CONF_POINTS)))
+@pytest.mark.parametrize("name", sorted(BRIDGE_REPRS))
+def test_bridge_differential_conformance(name, point):
+    cap, policy, _machine = CONF_POINTS[point]
+    disp = interpreter.run_dispersed(_bridge_program(name), cap, policy)
+    grid = _bridge_sim_grid(name)
+    got = {k: int(grid[k][0, point, point]) for k in DIFF_COUNTERS}
+    want = {k: int(getattr(disp, k)) for k in DIFF_COUNTERS}
+    assert got == want
