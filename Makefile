@@ -15,7 +15,7 @@ PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 TEST_BUDGET_SECS ?= 900
 
 .PHONY: test-fast test bench bench-smoke serve-smoke roofline-smoke \
-	network-smoke docs-check
+	network-smoke cluster-smoke docs-check
 
 test-fast:
 	timeout $(TEST_BUDGET_SECS) $(PYTEST) -x -q
@@ -28,10 +28,35 @@ bench:
 
 # Schema guard: the full front door (suites, --kernels subsetting, schema-5
 # JSON with metric metadata) on a 2-kernel subset in a couple of minutes.
-bench-smoke: serve-smoke roofline-smoke network-smoke
+bench-smoke: serve-smoke roofline-smoke network-smoke cluster-smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 	  --json BENCH_smoke.json --kernels dropout,gemv \
 	  fig2 table3 fig6 fig8 pareto
+
+# Cluster regression guard: the multi-core dispersion suite on a reduced
+# grid.  Asserts rows present, cluster-engine compiles bounded by the
+# (bucket x L1 geometry x cores) plan groups, and an N=1 row identical to
+# a fresh single-core Session.run at the same point (the passthrough pin,
+# exercised through the whole benchmark + JSON path).
+cluster-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+	  --json BENCH_cluster_smoke.json --kernels dropout \
+	  --max-events 4000 cluster_sweep
+	PYTHONPATH=$(PYTHONPATH) python -c "import json; \
+	  from repro import api; \
+	  r = json.load(open('BENCH_cluster_smoke.json'))['suites']['cluster_sweep']; \
+	  x = r['extra']; \
+	  assert r['rows'] > 0, r; \
+	  assert x['compiles'] <= x['plan_groups'], x; \
+	  row = [t for t in x['rows'] if t['cores'] == 1][0]; \
+	  res = api.Session().run(api.Sweep(kernels=[row['name']], \
+	    capacity=[row['capacity']], \
+	    l1_geometry=[api.L1Geometry.from_kbytes(row['l1_kb'])], \
+	    max_events=4000)); \
+	  assert int(res.value('cycles', capacity=row['capacity'])) \
+	    == row['cycles'], row; \
+	  print('cluster smoke OK:', r['rows'], 'rows,', x['compiles'], \
+	        'compiles /', x['plan_groups'], 'plan groups, N=1 identity holds')"
 
 # Network-bridge regression guard: whole registry models lowered through
 # repro.bridge on the truncation grid.  The JSON must record >0 rows, the

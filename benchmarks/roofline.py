@@ -9,8 +9,10 @@ traffic count (:mod:`repro.kernels.traffic`, walking the schedule's actual
 BlockSpec index maps) must agree with the model, and each row carries both
 arithmetic-intensity columns plus a per-row ``model_agree`` flag.
 
-The accumulator working set ``W`` and the input precision (f32 vs bf16,
-SPEED's multi-precision angle) are first-class labeled axes: rows are
+The accumulator working set ``W`` and the input precision (f32 / bf16 /
+int8, SPEED's multi-precision angle — int8 streams operands at one byte
+per element while the accumulators stay f32) are first-class labeled
+axes: rows are
 assembled through :meth:`repro.api.SweepResult.from_table`, so the
 ``derive`` / ``normalize`` / ``pareto`` machinery applies — the suite
 derives ``arithmetic_intensity`` / ``achieved_gflops`` from the metric
@@ -54,7 +56,7 @@ GEMM_CASES = {"gemm_256x512x256": (256, 512, 256),
               "gemm_512x512x256": (512, 512, 256)}
 FLASH_CASES = {"attn_b1h2_s256_d64": (1, 2, 256, 64)}
 W_AXIS = (0, 1, 2, 4)                  # 0 = the dispersed (spill/fill) extreme
-PRECISIONS = ("f32", "bf16")
+PRECISIONS = ("f32", "bf16", "int8")
 BLOCK_M, BLOCK_K = 64, 128
 FLASH_BLOCK = 64
 
@@ -66,8 +68,8 @@ SMOKE_W_AXIS = (0, 1, 2)
 # tolerance only absorbs float round-off in the ratio.
 AGREE_RTOL = 0.01
 
-_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
-_BYTES = {"f32": 4, "bf16": 2}
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
 
 _LAST_EXTRA: dict = {}
 _STATS = {"compiles": 0, "dispatches": 0}

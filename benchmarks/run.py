@@ -13,7 +13,7 @@ set and say so.  ``make bench-smoke`` uses it to guard the JSON schema
 cheaply.  ``--max-events N`` forwards the legacy truncation budget the
 same way.
 
-``--json PATH`` writes a versioned report (``schema: 5``): per-suite
+``--json PATH`` writes a versioned report (``schema: 6``): per-suite
 wall-clock, XLA compile AND dispatch counts (the fused engine compiles once
 per (program-shape bucket, L1 geometry) — machine-latency grids are traced,
 so they add rows, not compiles), the sweep-axis metadata of every
@@ -29,7 +29,11 @@ compile/dispatch counts to the suite record.  Schema 5 adds the
 ``repro.bridge``, with per-model footprint/cycles/energy rows and the
 lowered-network summaries (kernels, units, instances) in its ``extra``
 payload, plus ``networks`` on any sweep meta that used the ``network``
-axis.
+axis.  Schema 6 adds the ``cluster_sweep`` suite (``repro.cluster``:
+N lockstep dispersion cores behind a shared L2 + banked memory channels,
+one compile per (bucket, geometry, cores) plan group) with per-point
+cluster counters and iso-SRAM-budget / iso-area Pareto fronts in its
+``extra`` payload.
 """
 
 from __future__ import annotations
@@ -42,7 +46,7 @@ import time
 from repro import api, metrics
 from repro.core import simulator
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -59,6 +63,7 @@ _MODULES = {
     "ablation_sensitivity": "benchmarks.ablation_sensitivity",
     "roofline": "benchmarks.roofline",
     "network_sweep": "benchmarks.network_sweep",
+    "cluster_sweep": "benchmarks.cluster_sweep",
 }
 
 SUITES = tuple(_MODULES)

@@ -9,6 +9,10 @@ memory-system ablation — is a point grid over the same named axes:
   ``alloc_no_fetch``  beyond-paper write-allocate optimisation
   ``l1_geometry``   static L1 shape (:class:`L1Geometry`) — sizes the L1
                     state arrays, so each value is its own compiled engine
+  ``cores``         static cluster-size axis (N lockstep dispersion cores
+                    behind a shared L2, :mod:`repro.cluster`) — like the
+                    geometry, N sizes the engine state, so each value is
+                    its own compiled engine; present only when requested
   ``mem_latency`` / ``l1_hit_cycles`` / ``uop_hit_cycles``
                     traced machine-latency axes (never recompile)
 
@@ -209,6 +213,19 @@ class Sweep:
     per-layer records ride on the result's ``meta["networks"]``;
     :func:`repro.bridge.network_report` folds per-kernel counters back
     into per-model totals.
+
+    ``cores`` turns the sweep into a **cluster** sweep
+    (:mod:`repro.cluster`): each value N runs every point on N lockstep
+    dispersion cores behind the shared memory system described by
+    ``cluster`` (a :class:`repro.cluster.ClusterConfig` template whose
+    ``n_cores`` is overridden per axis point; ``None`` means no shared
+    L2, one memory channel).  Like ``l1_geometry``, ``cores`` is static —
+    the planner compiles one engine per (bucket, geometry, cores) group —
+    and the result grid gains a ``cores`` axis (after ``l1_geometry``)
+    plus the cluster counters (``contention_stalls``, ``l2_hits``,
+    ``l2_misses``, ``core_cycles_min/max/sum``); ``cycles`` becomes the
+    cluster makespan.  Single-core sweeps (``cores=(1,)`` and no
+    ``cluster``) are untouched — no ``cores`` axis, no cluster counters.
     """
 
     kernels: tuple[str, ...] = ()
@@ -225,6 +242,8 @@ class Sweep:
     fold: bool | None = None
     max_events: int | None = None
     network: tuple[str, ...] = ()
+    cores: tuple[int, ...] = (1,)
+    cluster: object | None = None     # repro.cluster.ClusterConfig template
 
     def __post_init__(self):
         fix = object.__setattr__
@@ -258,6 +277,29 @@ class Sweep:
             tuple(int(m) for m in _as_tuple(self.uop_hit_cycles)))
         fix(self, "l1_geometry",
             tuple(_as_geometry(g) for g in _as_tuple(self.l1_geometry)))
+        fix(self, "cores", tuple(int(n) for n in _as_tuple(self.cores)))
+        if any(n < 1 for n in self.cores):
+            raise ValueError(f"cores values must be >= 1, got {self.cores}")
+        if self.cluster is not None:
+            from repro.cluster import ClusterConfig
+            if not isinstance(self.cluster, ClusterConfig):
+                raise TypeError(
+                    f"cluster must be a repro.cluster.ClusterConfig, "
+                    f"got {self.cluster!r}")
+
+    @property
+    def is_cluster(self) -> bool:
+        """True when this sweep runs the cluster engine (a non-trivial
+        ``cores`` axis or an explicit shared-memory ``cluster`` template)."""
+        return self.cores != (1,) or self.cluster is not None
+
+    def cluster_config(self, n_cores: int):
+        """The :class:`repro.cluster.ClusterConfig` for one ``cores`` point:
+        the ``cluster`` template with its ``n_cores`` overridden (default
+        template: no shared L2, one memory channel)."""
+        from repro.cluster import ClusterConfig
+        base = self.cluster if self.cluster is not None else ClusterConfig()
+        return dataclasses.replace(base, n_cores=int(n_cores))
 
     # -- derived engine inputs -------------------------------------------
 
@@ -287,9 +329,10 @@ class Sweep:
             cfg_axes = (Axis("capacity", self.capacity),
                         Axis("policy", self.policy),
                         Axis("alloc_no_fetch", self.alloc_no_fetch))
+        core_axes = (Axis("cores", self.cores),) if self.is_cluster else ()
         return ((Axis("kernel", self.kernels),) + cfg_axes
-                + (Axis("l1_geometry", self.l1_geometry),
-                   Axis("mem_latency", self.mem_latency),
+                + (Axis("l1_geometry", self.l1_geometry),) + core_axes
+                + (Axis("mem_latency", self.mem_latency),
                    Axis("l1_hit_cycles", self.l1_hit_cycles),
                    Axis("uop_hit_cycles", self.uop_hit_cycles)))
 
@@ -738,6 +781,18 @@ class Session:
         self._dispatches += simulator.dispatch_count() - d0
         return out
 
+    def _simulate_cluster(self, preps, config, machine, cluster):
+        """Cluster-engine grid call with the same compile/dispatch
+        accounting as :meth:`_simulate` (the cluster engine increments the
+        simulator-module counters, so one probe covers both engines)."""
+        from repro.cluster import simulate_cluster_grid
+        c0, d0 = simulator.compile_count(), simulator.dispatch_count()
+        out = simulate_cluster_grid(preps, config, machine, cluster,
+                                    batch_programs=self.batch_programs)
+        self._compiles += simulator.compile_count() - c0
+        self._dispatches += simulator.dispatch_count() - d0
+        return out
+
     def _refine(self, names, out, config, machine, params) -> None:
         """Re-simulate, in place, every program whose fold certificate
         failed at any grid point and whose full trace is affordable."""
@@ -754,6 +809,31 @@ class Session:
                                params=params)], config, machine)
             for k in out:
                 out[k][pi] = sub[k][0] if k != "fold_exact" else True
+
+    def _refine_cluster(self, names, out, config, machine, sweep) -> None:
+        """Cluster analogue of :meth:`_refine`: re-simulate, unfolded and
+        per failing ``cores`` point, every program whose cluster fold
+        certificate failed (the shared L2 can break a period alignment
+        that holds single-core, so certificates are per (kernel, cores))."""
+        if "fold_exact" not in out:
+            return
+        for pi, name in enumerate(names):
+            if out["fold_exact"][pi].all():
+                continue
+            rows = self.built(
+                name, sweep.kernel_params).program.num_instructions
+            if rows > self.refine_max_rows:
+                continue
+            prep = self.prepared(name, fold=False, machine=machine,
+                                 params=sweep.kernel_params)
+            for ki, n in enumerate(sweep.cores):
+                if out["fold_exact"][pi, ki].all():
+                    continue
+                sub = self._simulate_cluster(
+                    [prep], config, machine, sweep.cluster_config(n))
+                for k in out:
+                    out[k][pi, ki] = sub[k][0] if k != "fold_exact" \
+                        else True
 
     # -- execution --------------------------------------------------------
 
@@ -790,6 +870,12 @@ class Session:
         sharing the group's one compiled executable otherwise.  The traced
         latency grid rides inside every dispatch; uncertified folds are
         refined per geometry exactly as :meth:`grid` does.
+
+        Cluster sweeps (:attr:`Sweep.is_cluster`) add the static ``cores``
+        axis to the plan loop: one cluster-engine call per (bucket,
+        geometry, cores) group — each a plan entry carrying ``cores`` —
+        and the result grid gains the cluster counters with ``cycles`` as
+        the cluster makespan.
         """
         fold = self.fold if sweep.fold is None else sweep.fold
         if sweep.max_events is not None:
@@ -797,6 +883,7 @@ class Session:
         names = list(sweep.kernels)
         config = sweep.config()
         c0, d0 = self._compiles, self._dispatches
+        cluster_mode = sweep.is_cluster
         plan = []
         per_geo = []
         for geo in sweep.l1_geometry:
@@ -813,22 +900,40 @@ class Session:
             parts: dict[str, dict[str, np.ndarray]] = {}
             for bucket in sorted(groups):
                 group = groups[bucket]
-                sub = self._simulate([preps[n] for n in group], config,
-                                     machines)
-                plan.append(dict(l1_geometry=str(geo), bucket=bucket,
-                                 kernels=list(group),
-                                 fused=bool(self.batch_programs)))
-                for gi, n in enumerate(group):
-                    parts[n] = {k: v[gi] for k, v in sub.items()}
-            shape_cm = parts[names[0]]["cycles"].shape      # (C, M)
+                group_preps = [preps[n] for n in group]
+                if cluster_mode:
+                    subs = []
+                    for ncores in sweep.cores:
+                        subs.append(self._simulate_cluster(
+                            group_preps, config, machines,
+                            sweep.cluster_config(ncores)))
+                        plan.append(dict(
+                            l1_geometry=str(geo), bucket=bucket,
+                            cores=ncores, kernels=list(group),
+                            fused=bool(self.batch_programs)))
+                    for gi, n in enumerate(group):
+                        parts[n] = {k: np.stack([s[k][gi] for s in subs])
+                                    for k in subs[0]}        # (K, C, M)
+                else:
+                    sub = self._simulate(group_preps, config, machines)
+                    plan.append(dict(l1_geometry=str(geo), bucket=bucket,
+                                     kernels=list(group),
+                                     fused=bool(self.batch_programs)))
+                    for gi, n in enumerate(group):
+                        parts[n] = {k: v[gi] for k, v in sub.items()}
+            shape_cm = parts[names[0]]["cycles"].shape  # (C, M) / (K, C, M)
             for n in names:                  # normalise across buckets
                 parts[n].setdefault(
                     "fold_exact", np.ones(shape_cm, bool))
             geo_out = {k: np.stack([parts[n][k] for n in names])
                        for k in parts[names[0]]}
             if fold and self.refine:
-                self._refine(names, geo_out, config, machines,
-                             sweep.kernel_params)
+                if cluster_mode:
+                    self._refine_cluster(names, geo_out, config, machines,
+                                         sweep)
+                else:
+                    self._refine(names, geo_out, config, machines,
+                                 sweep.kernel_params)
             per_geo.append(geo_out)
         axes = sweep.axes()
         if sweep.config_points is not None:
@@ -840,11 +945,22 @@ class Session:
                   len(sweep.uop_hit_cycles))
         data = {}
         for k in per_geo[0]:
-            stacked = np.stack([g[k] for g in per_geo])   # (G, P, C, M)
-            g, p = stacked.shape[:2]
-            stacked = stacked.reshape((g, p) + cshape + mshape)
-            # geometry moves to its canonical slot: after the config axes.
-            data[k] = np.moveaxis(stacked, 0, 1 + len(cshape))
+            if cluster_mode:
+                # (G, P, K, C, M) -> geometry and cores move to their
+                # canonical slots after the config axes.
+                stacked = np.stack([g[k] for g in per_geo])
+                g, p, kc = stacked.shape[:3]
+                stacked = stacked.reshape((g, p, kc) + cshape + mshape)
+                data[k] = np.moveaxis(
+                    stacked, (0, 2),
+                    (1 + len(cshape), 2 + len(cshape)))
+            else:
+                stacked = np.stack([g[k] for g in per_geo])  # (G, P, C, M)
+                g, p = stacked.shape[:2]
+                stacked = stacked.reshape((g, p) + cshape + mshape)
+                # geometry moves to its canonical slot: after the config
+                # axes.
+                data[k] = np.moveaxis(stacked, 0, 1 + len(cshape))
         meta = dict(
             plan=plan,
             compiles=self._compiles - c0,
@@ -857,6 +973,12 @@ class Session:
                            else dict(sweep.kernel_params)),
             fold=fold,
         )
+        if cluster_mode:
+            cl0 = sweep.cluster_config(1)
+            meta["cluster"] = dict(
+                cores=list(sweep.cores), l2_sets=cl0.l2_sets,
+                l2_ways=cl0.l2_ways, mem_channels=cl0.mem_channels,
+                l2_hit_cycles=cl0.l2_hit_cycles, l2_bytes=cl0.l2_bytes)
         lowered = getattr(sweep, "_lowered", ())
         if lowered:
             meta["networks"] = [net.summary() for net in lowered]

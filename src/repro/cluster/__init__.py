@@ -1,0 +1,22 @@
+"""Clustered vector units: N dispersion cores behind shared memory.
+
+``repro.cluster`` lifts the fused single-core engine to a lockstep
+N-core cluster (private cVRF + L1 per core, shared L2 + banked memory
+channels with deterministic round-robin arbitration) — still one
+``lax.scan`` per sweep, so a whole cores x capacity x policy x latency
+grid is one XLA dispatch.  See ``docs/cluster.md`` for the arbiter spec
+and the iso-SRAM-budget sweep methodology.
+"""
+
+from repro.cluster.contention import (ClusterConfig, l2_access, l2_init,
+                                      queue_rounds, rank_order)
+from repro.cluster.engine import (CLUSTER_COUNTER_NAMES,
+                                  CORE_CYCLE_AGGREGATES,
+                                  check_cluster_affine,
+                                  simulate_cluster_grid)
+
+__all__ = [
+    "ClusterConfig", "CLUSTER_COUNTER_NAMES", "CORE_CYCLE_AGGREGATES",
+    "check_cluster_affine", "l2_access", "l2_init", "queue_rounds",
+    "rank_order", "simulate_cluster_grid",
+]

@@ -1,0 +1,134 @@
+"""Shared-memory contention model for clustered vector cores.
+
+A cluster (Spatz-style, arXiv:2309.10137) puts N homogeneous
+dispersion cores — each with its private cVRF + L1 — behind one shared
+L2 and a banked main-memory interface.  This module holds the *static*
+cluster description and the two pure pieces the engine composes per
+scan step:
+
+  * a shared **L2 lookup** (sets x ways, LRU, read-allocate on demand
+    misses; dirty L1 writebacks are absorbed by a write buffer and
+    bypass both the L2 and the arbiter), and
+  * a deterministic **round-robin banked-channel arbiter**: the L1-miss
+    streams that also miss the L2 contend for ``mem_channels`` memory
+    banks.  Requests issued in the same lockstep instruction slot are
+    served in round-robin core order (the RR pointer advances one core
+    per instruction), each bank serving one request per ``mem_latency``
+    window; a request finding ``b`` earlier-ranked requests queued waits
+    ``(b // mem_channels) * mem_latency`` extra cycles.
+
+Only *cross-core* queueing is charged here: the single-core engine
+already serializes a core's own misses at ``mem_latency`` each, so the
+arbiter's exclusive-cumsum over earlier-ranked cores never double-counts
+— and an N=1 cluster gets identically zero contention, which is the
+bit-identity pin in ``tests/test_golden_counters.py``.
+
+Every quantity the arbiter derives (L2 hits, queue rounds) depends only
+on hit/miss *decisions*, never on the latency values, so cluster cycle
+counts stay affine in the traced machine latencies and
+``costmodel.check_machine_affine`` extends to the cluster
+(:func:`repro.cluster.engine.check_cluster_affine`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import simulator
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Static description of one cluster of dispersion cores.
+
+    Every field is static (hashable) — like ``l1_sets``/``l1_ways``, the
+    core count and L2 geometry size engine state arrays, so each distinct
+    ``ClusterConfig`` is its own compiled executable (its own plan group
+    in ``repro.api``).  The per-core cVRF capacity/policy stays on the
+    existing :class:`repro.core.simulator.SweepConfig` axis and the L1
+    geometry + latencies on :class:`~repro.core.simulator.MachineSweep`;
+    this class only adds what is *shared*: the L2 and the memory
+    channels.  ``l2_hit_cycles`` is static (not a traced latency axis) so
+    cluster cycles remain affine in the three traced latencies.
+    """
+
+    n_cores: int = 1
+    l2_sets: int = 0          # 0 => no shared L2 (pass-through to memory)
+    l2_ways: int = 4
+    mem_channels: int = 1     # memory banks serving one request / latency
+    l2_hit_cycles: int = 2    # static: replaces mem_latency on an L2 hit
+
+    def __post_init__(self):
+        if self.n_cores < 1:
+            raise ValueError(f"n_cores must be >= 1, got {self.n_cores}")
+        if self.mem_channels < 1:
+            raise ValueError(
+                f"mem_channels must be >= 1, got {self.mem_channels}")
+        if self.l2_sets and self.l2_sets & (self.l2_sets - 1):
+            raise ValueError(
+                f"l2_sets must be 0 or a power of two, got {self.l2_sets}")
+
+    @staticmethod
+    def passthrough(n_cores: int = 1) -> "ClusterConfig":
+        """The identity cluster: no shared L2 and enough channels that the
+        arbiter can never queue (a step issues at most NUM_MISS_SITES
+        requests per core, so ``n_cores * NUM_MISS_SITES`` banks make every
+        exclusive-cumsum queue depth round down to zero).  An N=1
+        passthrough cluster reproduces the single-core engine's counters
+        bit-exactly."""
+        return ClusterConfig(
+            n_cores=n_cores, l2_sets=0, l2_ways=1,
+            mem_channels=n_cores * simulator.NUM_MISS_SITES)
+
+    @property
+    def l2_bytes(self) -> int:
+        """Shared-L2 data capacity (32 B lines, matching the L1 model)."""
+        return self.l2_sets * self.l2_ways * 32
+
+
+def l2_init(l2_sets: int, l2_ways: int):
+    """Shared-L2 state: (sets, ways, 2) int32 with [:, :, 0] the line tag
+    (-1 free) and [:, :, 1] the LRU age — a carried access clock rather
+    than the L1's packed slot-grid timestamp, since cluster traces touch
+    the L2 far fewer times than there are slot-grid ticks (the clock stays
+    far from int32 overflow)."""
+    l2 = jnp.zeros((max(l2_sets, 1), l2_ways, 2), jnp.int32)
+    return l2.at[:, :, 0].set(-1)
+
+
+def l2_access(l2, line, clock, l2_sets: int):
+    """One shared-L2 probe for an L1-missed ``line`` (-1 => no request).
+
+    Returns ``(l2', hit)``.  LRU within the set, allocate on miss; the
+    state update is a no-op for inactive (-1) requests.  Hit/miss
+    decisions depend only on the request stream, never on latencies."""
+    active = line >= 0
+    set_idx = jnp.where(active, line, 0) % l2_sets
+    row = l2[set_idx]                              # (ways, 2)
+    eq = row[:, 0] == line
+    hit = eq.any() & active
+    way = jnp.where(hit, jnp.argmax(eq), jnp.argmin(row[:, 1]))
+    new = jnp.stack([line, clock])
+    l2_new = l2.at[set_idx, way].set(jnp.where(active, new, row[way]))
+    return l2_new, hit
+
+
+def rank_order(n_cores: int, t):
+    """Round-robin service order for instruction ``t``: rank r is served
+    r-th this step, and ``rank_order(...)[r]`` is the core holding that
+    rank.  The RR pointer advances one core per instruction so every core
+    periodically goes first — the fairness property pinned in
+    ``tests/test_cluster.py``."""
+    return (t % n_cores + jnp.arange(n_cores, dtype=jnp.int32)) % n_cores
+
+
+def queue_rounds(reqs_rr, mem_channels: int):
+    """Banked-channel queue depth per rank: with requests served in rank
+    order, one per channel per ``mem_latency`` window, rank r's requests
+    wait behind the exclusive cumsum of earlier ranks' requests and stall
+    ``(before // mem_channels)`` full memory latencies.  Rank 0 (and all of
+    an N=1 cluster) always gets 0."""
+    before = jnp.cumsum(reqs_rr) - reqs_rr
+    return before // mem_channels

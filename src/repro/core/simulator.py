@@ -224,23 +224,43 @@ def _l1_access(l1, line, is_write, now, active, l1_sets: int,
 # ---------------------------------------------------------------------------
 
 
-def _make_step(l1_sets, slots_used, track_ab, spill0, cfg, mach):
+# L1 access sites one instruction can touch, in engine order: (spill, fill)
+# per REG slot 0..2, then the two MEM lanes.  The per-site missed-line
+# vector is the per-core L1-miss stream the cluster engine's shared-L2 /
+# memory-channel arbiter consumes (repro.cluster).
+NUM_MISS_SITES = 8
+
+
+def _make_body(l1_sets, slots_used, cfg, mach):
+    """The per-instruction engine body, shared by the single-core step and
+    the cluster engine's vmapped per-core step (:mod:`repro.cluster`).
+
+    Returns ``body(state, xs, spill0, mem_base, now0) -> (state', inc,
+    miss_lines)`` where ``state = (cache, l1, seq)``, ``inc`` is the (12,)
+    counter increment vector (order = COUNTER_NAMES) and ``miss_lines`` is
+    the (NUM_MISS_SITES,) int32 vector of cachelines this instruction
+    missed in the L1 (-1 at sites that hit, were inactive, or are unused).
+    ``mem_base`` offsets the instruction's own data lines (per-core address
+    colouring in a cluster; 0 on the single-core path, where the per-core
+    offset is instead folded into ``spill0`` for the spill region).
+    """
     capacity, policy, anf = cfg
     l1_hit, uop_hit, mem_lat = mach
     full_vrf = capacity >= isa.NUM_ARCH_VREGS
     valid_mask = jnp.arange(isa.NUM_ARCH_VREGS) < capacity
-    spill0 = spill0.astype(jnp.int32)
     F = jnp.bool_(False)
     no_lock = jnp.int8(-1)
+    neg1 = jnp.int32(-1)
 
-    def step(carry, xs):
-        cache, l1, seq, now0, ctr, ctrA, ctrB = carry
+    def body(state, xs, spill0, mem_base, now0):
+        cache, l1, seq = state
         (rv, rg, vdw, vdr, vdnf, lk1, lk2, mv, ml, mw, cost, nxt,
-         wt, wa, wb) = xs
+         _wt, _wa, _wb) = xs
         i32 = lambda b: b.astype(jnp.int32)
         z = jnp.int32(0)
         stall = memc = hits = misses = spills = fills = z
         l1h = l1m = rr = rw = mr = mw_ = z
+        miss_lines = [neg1] * NUM_MISS_SITES
 
         # REG lanes in the hardware's serial tag-check order.
         write_of = (F, F, vdw)
@@ -267,11 +287,13 @@ def _make_step(l1_sets, slots_used, track_ab, spill0, cfg, mach):
             do_fill = miss & fetch
             # Spill the evictee to its reserved line, then fill the missing
             # register — both 1-cycle uops through the L1.
+            spill_line = spill0 + jnp.maximum(vrow[policies.TAG], 0)
+            fill_line = spill0 + jnp.maximum(rg[s].astype(jnp.int32), 0)
             l1, c_sp, h_sp = _l1_access(
-                l1, spill0 + jnp.maximum(vrow[policies.TAG], 0), True, now,
+                l1, spill_line, True, now,
                 do_spill, l1_sets, uop_hit, mem_lat)
             l1, c_fl, h_fl = _l1_access(
-                l1, spill0 + jnp.maximum(rg[s].astype(jnp.int32), 0), False,
+                l1, fill_line, False,
                 now, do_fill, l1_sets, uop_hit, mem_lat)
             cache = policies.apply_access(
                 cache, active=active & ~full_vrf, raw_hit=raw_hit,
@@ -287,25 +309,48 @@ def _make_step(l1_sets, slots_used, track_ab, spill0, cfg, mach):
             l1m += i32(do_spill & ~h_sp) + i32(do_fill & ~h_fl)
             rr += i32(active & rd)
             rw += i32(active & wr)
+            miss_lines[2 * s] = jnp.where(do_spill & ~h_sp,
+                                          spill_line.astype(jnp.int32), neg1)
+            miss_lines[2 * s + 1] = jnp.where(do_fill & ~h_fl,
+                                              fill_line.astype(jnp.int32),
+                                              neg1)
 
         # MEM lanes: the instruction's own data accesses.
         for m in range(2):
             if not slots_used[3 + m]:
                 continue
             active = mv[m]
-            l1, c_m, h_m = _l1_access(l1, ml[m], mw[m], now0 + 3 + m,
+            line = ml[m] + mem_base
+            l1, c_m, h_m = _l1_access(l1, line, mw[m], now0 + 3 + m,
                                       active, l1_sets, l1_hit, mem_lat)
             memc += c_m
             l1h += i32(active & h_m)
             l1m += i32(active & ~h_m)
             mr += i32(active & ~mw[m])
             mw_ += i32(active & mw[m])
+            miss_lines[6 + m] = jnp.where(active & ~h_m,
+                                          line.astype(jnp.int32), neg1)
 
         # One (12,)-vector FMA per counter set (order = COUNTER_NAMES).
         inc = jnp.stack([
             cost + stall + memc, stall, hits, misses, spills, fills,
             l1h, l1m, rr, rw, mr, mw_,
         ])
+        return (cache, l1, seq), inc, jnp.stack(miss_lines)
+
+    return body
+
+
+def _make_step(l1_sets, slots_used, track_ab, spill0, cfg, mach):
+    body = _make_body(l1_sets, slots_used, cfg, mach)
+    spill0 = spill0.astype(jnp.int32)
+    zero_base = jnp.int32(0)
+
+    def step(carry, xs):
+        cache, l1, seq, now0, ctr, ctrA, ctrB = carry
+        wt, wa, wb = xs[-3:]
+        (cache, l1, seq), inc, _ = body(
+            (cache, l1, seq), xs, spill0, zero_base, now0)
         ctr = ctr + inc * wt
         if track_ab:
             ctrA = ctrA + inc * wa

@@ -455,6 +455,67 @@ def _narrow_vrf_speedup(ctx):
 
 
 # ---------------------------------------------------------------------------
+# Cluster metrics: over grids with a ``cores`` axis (repro.cluster sweeps).
+# The shared-memory system (L2 geometry, channels) is uniform across the
+# grid and rides on ``meta["cluster"]``; per-core quantities come from the
+# existing axes (capacity, l1_geometry) times the ``cores`` axis.
+# ---------------------------------------------------------------------------
+
+
+def _cluster_meta(ctx) -> dict:
+    cl = ctx.result.meta.get("cluster")
+    if cl is None:
+        raise KeyError(
+            "no meta['cluster'] — this metric needs a cluster sweep "
+            "(api.Sweep with a cores axis, run through Session.run)")
+    return cl
+
+
+@register("cluster_area", "model",
+          "whole-cluster area (au): cores * (CPU+VPU logic + L1 macro) "
+          "plus the shared-L2 SRAM macro from meta['cluster']",
+          params=("dispersed", "n_lanes"))
+def _cluster_area(ctx):
+    cl = _cluster_meta(ctx)
+    l2_au = cl["l2_bytes"] * 8 * costmodel.SRAM_AU_PER_BIT \
+        + (costmodel.SRAM_PERIPHERY_AU if cl["l2_bytes"] else 0.0)
+    return ctx.axis_grid("cores") * ctx.counter("area_with_l1") + l2_au
+
+
+@register("sram_budget_bytes", "model",
+          "total storage the cluster holds: cores * (capacity * VLEN_BYTES "
+          "+ L1 bytes) + shared-L2 bytes — the iso-budget axis of "
+          "benchmarks/cluster_sweep.py",
+          params=())
+def _sram_budget_bytes(ctx):
+    cl = _cluster_meta(ctx)
+    l1_bytes = ctx.axis_grid("l1_sets") * ctx.axis_grid("l1_ways") * 32
+    per_core = ctx.axis_grid("capacity") * isa.VLEN_BYTES + l1_bytes
+    return ctx.axis_grid("cores") * per_core + cl["l2_bytes"]
+
+
+@register("aggregate_throughput", "derived",
+          "cluster-wide useful work rate: summed reg_writes per makespan "
+          "cycle (reg_writes / scaled_cycles) — N perfectly scaling cores "
+          "read N x the single-core value",
+          params=())
+def _aggregate_throughput(ctx):
+    return ctx.counter("reg_writes") / ctx.counter("scaled_cycles")
+
+
+@register("contention_stall_ratio", "derived",
+          "fraction of total core-cycles spent queued on the shared "
+          "memory channels (contention_stalls / core_cycles_sum); 0 on a "
+          "passthrough or single-core cluster",
+          params=())
+def _contention_stall_ratio(ctx):
+    stalls = np.asarray(ctx.counter("contention_stalls"), np.float64)
+    total = np.asarray(ctx.counter("core_cycles_sum"), np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(total > 0, stalls / np.maximum(total, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Built-in relational metrics: baseline-relative queries.
 # ---------------------------------------------------------------------------
 

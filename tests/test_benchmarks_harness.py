@@ -24,6 +24,9 @@ NAMES = ("pathfinder", "jacobi2d", "somier", "gemv", "dropout",
     ("benchmarks.kv_dispersion", {"steps": 150}),
     ("benchmarks.network_sweep", {"models": ("granite-8b",), "caps": (4, 8),
                                   "l1_kbytes": (4,), "max_events": 120}),
+    ("benchmarks.cluster_sweep", {"names": ("dropout",), "cores": (1, 2),
+                                  "caps": (4,), "l1_kbytes": (4,),
+                                  "max_events": 4000}),
     # The machine-latency grid is traced (no per-machine rebuilds), but the
     # fast suite already exercises this run in tests/test_machine_grid.py,
     # so the harness duplicate stays out of the default selection.
@@ -39,7 +42,7 @@ def test_suite_produces_rows(mod, kw):
 
 
 def test_run_json_schema(tmp_path):
-    """The front door's --json report: schema 5, --kernels subsetting, the
+    """The front door's --json report: schema 6, --kernels subsetting, the
     metric-registry catalog, and per-sweep derived-metric metadata."""
     import json
 
@@ -49,7 +52,7 @@ def test_run_json_schema(tmp_path):
                       "--max-events", "12000", "fig2", "fig6"])
     assert rc == 0
     rep = json.loads(out.read_text())
-    assert rep["schema"] == 5
+    assert rep["schema"] == 6
     assert rep["metrics"]["speedup"]["kind"] == "relational"
     assert rep["metrics"]["application_power"]["kind"] == "model"
     fig6 = rep["suites"]["fig6"]
@@ -103,7 +106,22 @@ def test_roofline_json_extra_schema_guard(tmp_path):
     assert set(rep["extra"]["axes"]) == {"case", "working_set", "precision"}
 
 
-def test_roofline_dry_run_path_warns_or_reports():
+def test_roofline_int8_precision_point():
+    """int8 is a first-class roofline precision: operands stream at one
+    byte per element (the model halves again from bf16) while the f32
+    accumulator terms stay fixed, and counted == model still holds on the
+    measured point."""
+    import benchmarks.roofline as rl
+    assert "int8" in rl.PRECISIONS
+    assert rl._BYTES["int8"] == 1
+    p8 = rl._gemm_point("g", 128, 256, 128, 1, "int8", block_m=64,
+                        block_k=128, interpret=True, repeats=1)
+    p16 = rl._gemm_point("g", 128, 256, 128, 1, "bf16", block_m=64,
+                         block_k=128, interpret=True, repeats=1)
+    assert p8["model_agree"] is True and p16["model_agree"] is True
+    # grouped W>=1 traffic is pure operand streaming: exactly bpe-linear
+    assert p8["model_bytes"] * 2 == p16["model_bytes"]
+    assert p8["name"].endswith("_int8")
     """The legacy dry-run table: warns (instead of silently emitting
     nothing) when results/dryrun is absent; load_cells reports corrupt
     cells instead of swallowing them."""

@@ -1,0 +1,232 @@
+"""repro.cluster: shared-L2 + banked-channel contention model.
+
+Unit-pins the two pure arbiter pieces (round-robin rank order,
+exclusive-cumsum queue depths, the LRU L2), then property-tests the fused
+cluster engine: makespan monotone in the core count, per-core counters
+exactly affine in the traced latencies (with the ``l1_misses - l2_hits``
+memory-slope floor), round-robin fairness (no core starves), and the
+``repro.api`` planner contract — ONE cluster-engine compile per
+(bucket, L1 geometry, cores) plan group.  The N=1 bit-identity pin lives
+with the golden counters (``tests/test_golden_counters.py``); the full
+paper-size grid of ``benchmarks/cluster_sweep.py`` runs in the slow tier.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.cluster import (CLUSTER_COUNTER_NAMES, ClusterConfig,
+                           check_cluster_affine, l2_access, l2_init,
+                           queue_rounds, rank_order, simulate_cluster_grid)
+from repro.core import policies, simulator
+
+# ---------------------------------------------------------------------------
+# Arbiter primitives.
+# ---------------------------------------------------------------------------
+
+
+def test_rank_order_is_a_fair_rotation():
+    """Every step's service order is a permutation, and over any N
+    consecutive instructions each core holds rank 0 (goes first) exactly
+    once — the deterministic no-starvation guarantee."""
+    n = 4
+    first = []
+    for t in range(2 * n):
+        order = np.asarray(rank_order(n, t))
+        assert sorted(order.tolist()) == list(range(n)), t
+        first.append(int(order[0]))
+    for core in range(n):
+        assert first[:n].count(core) == 1
+        assert first[n:].count(core) == 1
+
+
+def test_queue_rounds_exclusive_cumsum():
+    """Rank r waits behind earlier ranks only (own-core misses are already
+    serialized inside the core model): reqs [3, 1, 0, 2] on 2 channels
+    queue [0, 1, 2, 2] rounds; rank 0 and every single-core cluster get
+    exactly zero."""
+    q = np.asarray(queue_rounds(np.asarray([3, 1, 0, 2], np.int32), 2))
+    assert q.tolist() == [0, 1, 2, 2]
+    assert int(queue_rounds(np.asarray([7], np.int32), 1)[0]) == 0
+    assert np.asarray(queue_rounds(
+        np.asarray([1, 1, 1], np.int32), 8)).tolist() == [0, 0, 0]
+
+
+def test_l2_access_lru_allocate_and_inactive():
+    l2 = l2_init(2, 2)
+    clock = 1          # ages stay positive so filled lines beat free ways
+    hits = []
+    for line in (0, 2, 0, 4, 2):       # all map to set 0 (line % 2 == 0)
+        l2, h = l2_access(l2, line, clock, 2)
+        hits.append(bool(h))
+        clock += 1
+    # 0 miss, 2 miss, 0 hit (refreshes age), 4 miss evicting LRU line 2,
+    # so 2 misses again
+    assert hits == [False, False, True, False, False]
+    before = np.asarray(l2)
+    l2, h = l2_access(l2, -1, clock, 2)        # inactive: no-op
+    assert not bool(h)
+    np.testing.assert_array_equal(np.asarray(l2), before)
+
+
+def test_cluster_config_validation():
+    with pytest.raises(ValueError, match="n_cores"):
+        ClusterConfig(n_cores=0)
+    with pytest.raises(ValueError, match="mem_channels"):
+        ClusterConfig(mem_channels=0)
+    with pytest.raises(ValueError, match="l2_sets"):
+        ClusterConfig(l2_sets=3)
+    assert ClusterConfig(l2_sets=256).l2_bytes == 256 * 4 * 32
+    assert ClusterConfig.passthrough(4).mem_channels == \
+        4 * simulator.NUM_MISS_SITES
+
+
+# ---------------------------------------------------------------------------
+# Engine properties on a real trace.
+# ---------------------------------------------------------------------------
+
+_CL = dict(l2_sets=64, l2_ways=2, mem_channels=1)
+
+
+def _prep():
+    from repro import rvv
+    b = rvv.BENCHMARKS["gemv"]
+    return simulator.prepare(b.build(**b.reduced_params).program)
+
+
+def _sweep():
+    return simulator.SweepConfig(np.asarray([4], np.int32),
+                                 np.asarray([policies.LRU], np.int32),
+                                 np.zeros(1, bool))
+
+
+def _machines():
+    return simulator.MachineSweep.from_params(
+        [simulator.MachineParams(mem_latency=m, l1_sets=8, l1_ways=1)
+         for m in (5, 9, 13)])
+
+
+def _run(n_cores, **kw):
+    return simulate_cluster_grid([_prep()], _sweep(), _machines(),
+                                 ClusterConfig(n_cores=n_cores, **_CL), **kw)
+
+
+def test_cluster_makespan_monotone_in_cores():
+    """With the shared memory system held fixed, adding lockstep cores can
+    only add interference: the cluster makespan is nondecreasing in N at
+    every machine point (the per-set LRU stack property — interleaved
+    traffic never turns an L2 miss into a hit for the victim)."""
+    prev = None
+    for n in (1, 2, 4):
+        out = _run(n)
+        mk = out["cycles"][0, 0]
+        if n == 1:
+            assert (out["contention_stalls"] == 0).all()
+        if prev is not None:
+            assert (mk >= prev).all(), (n, mk, prev)
+        prev = mk
+
+
+def test_cluster_per_core_counters_affine_in_latencies():
+    """Every core's cycles / stall_cycles / contention_stalls must be
+    exactly affine in the traced latencies (l2_hit_cycles is static by
+    design) and all decision counters machine-invariant; the mem_latency
+    slope floor is l1_misses - l2_hits."""
+    out = _run(4, return_per_core=True)
+    coeffs = check_cluster_affine(out["per_core"], _machines())
+    # (P, C, N, 4) per-core planes; the mem slope must reflect L2 filtering
+    assert coeffs["cycles"].shape == (1, 1, 4, 4)
+    pc = out["per_core"]
+    floor = pc["l1_misses"][0, 0, 0] - pc["l2_hits"][0, 0, 0]
+    assert (coeffs["cycles"][0, 0, :, 3] >= floor).all()
+    for k in ("l2_hits", "l2_misses", "l1_misses", "vrf_hits", "spills"):
+        v = pc[k]                                   # (P, C, M, N)
+        assert (v == v[:, :, :1]).all(), k
+
+
+def test_cluster_rr_fairness_no_core_starves():
+    """The rotating arbiter spreads the queueing cost: at N=4 on one
+    channel every core pays some contention, the per-core stall spread
+    stays within 1.5x, and per-core completion times within 10% — no core
+    is starved by a fixed priority."""
+    out = _run(4, return_per_core=True)
+    pc = out["per_core"]
+    stalls = pc["contention_stalls"][0, 0]          # (M, N)
+    assert (stalls > 0).all()
+    assert (stalls.max(axis=-1) <= 1.5 * stalls.min(axis=-1)).all()
+    cyc = pc["cycles"][0, 0]
+    assert (cyc.max(axis=-1) <= 1.1 * cyc.min(axis=-1)).all()
+
+
+def test_cluster_counter_layout():
+    out = _run(2)
+    assert CLUSTER_COUNTER_NAMES[:len(simulator.COUNTER_NAMES)] == \
+        simulator.COUNTER_NAMES
+    for k in CLUSTER_COUNTER_NAMES + ("core_cycles_min", "core_cycles_max",
+                                      "core_cycles_sum"):
+        assert out[k].shape == (1, 1, 3), k
+    assert (out["core_cycles_min"] <= out["core_cycles_max"]).all()
+    assert (out["cycles"] == out["core_cycles_max"]).all()
+
+
+# ---------------------------------------------------------------------------
+# The api.Session planner contract.
+# ---------------------------------------------------------------------------
+
+
+def test_session_compiles_once_per_cluster_plan_group():
+    """The acceptance pin: a cluster sweep is ONE engine call per (bucket,
+    L1 geometry, cores) plan group, each its own compile (ClusterConfig and
+    geometry are jit statics; the latency grid rides traced inside)."""
+    ses = api.Session(batch_programs=False)
+    # A cluster shape no other test uses, so the process-level jit cache
+    # cannot hide the compiles this sweep must trigger.
+    cl = ClusterConfig(l2_sets=32, l2_ways=3, mem_channels=3)
+    sweep = api.Sweep(
+        kernels=("gemv",), capacity=(3, 5),
+        l1_geometry=(api.L1Geometry.from_kbytes(4),
+                     api.L1Geometry.from_kbytes(16)),
+        cores=(1, 2), cluster=cl, kernel_params="reduced", fold=False)
+    res = ses.run(sweep)
+    plan = res.meta["plan"]
+    groups = {(g["l1_geometry"], g["bucket"], g["cores"]) for g in plan}
+    assert len(plan) == len(groups) == 4      # 2 geometries x 1 bucket x 2 N
+    assert res.meta["compiles"] == len(groups)
+    assert res.meta["dispatches"] == len(plan)
+    assert all("cores" in g for g in plan)
+    assert res.axis("cores").values == (1, 2)
+    assert res.meta["cluster"]["l2_bytes"] == cl.l2_bytes
+    # N=1 slice of the cluster grid == the plain single-core sweep
+    single = ses.run(api.Sweep(
+        kernels=("gemv",), capacity=(3, 5),
+        l1_geometry=(api.L1Geometry.from_kbytes(4),
+                     api.L1Geometry.from_kbytes(16)),
+        kernel_params="reduced", fold=False))
+    np.testing.assert_array_equal(
+        res.data["cycles"][:, :, :, :, :, 0], single.data["cycles"])
+
+
+# ---------------------------------------------------------------------------
+# The paper-size benchmark grid (slow tier).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_cluster_sweep_full_grid():
+    from benchmarks import cluster_sweep
+    rows = cluster_sweep.run()
+    want = (len(cluster_sweep.KERNELS) * len(cluster_sweep.CAPS)
+            * len(cluster_sweep.L1_KBYTES) * len(cluster_sweep.CORES))
+    assert len(rows) == want
+    extra = cluster_sweep.json_extra()
+    # One compile per planned (bucket, geometry, cores) group; the shared
+    # L2 legitimately breaks some fold certificates, and each failing
+    # (kernel, cores) point triggers at most one unfolded refine call.
+    refine_cap = len(cluster_sweep.KERNELS) * len(cluster_sweep.CORES)
+    assert extra["plan_groups"] <= extra["compiles"] <= \
+        extra["plan_groups"] + refine_cap
+    for name in cluster_sweep.KERNELS:
+        front = extra["iso_budget_front"][name]
+        assert front
+        budgets = [r["sram_budget_bytes"] for r in front]
+        assert budgets == sorted(budgets)

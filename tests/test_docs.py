@@ -28,8 +28,8 @@ def test_readme_quickstart_block_executes():
 
 
 def test_docs_pages_exist():
-    for page in ("api.md", "architecture.md", "bridge.md", "folding.md",
-                 "kernels.md", "metrics.md", "serving.md"):
+    for page in ("api.md", "architecture.md", "bridge.md", "cluster.md",
+                 "folding.md", "kernels.md", "metrics.md", "serving.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
 
@@ -60,6 +60,13 @@ def test_bridge_doc_blocks_execute():
     assert blocks, "docs/bridge.md lost its ```python lowering examples"
     for block in blocks:
         exec(compile(block, "docs/bridge.md", "exec"), {})
+
+
+def test_cluster_doc_blocks_execute():
+    blocks = _python_blocks(ROOT / "docs" / "cluster.md")
+    assert blocks, "docs/cluster.md lost its ```python sweep example"
+    for block in blocks:
+        exec(compile(block, "docs/cluster.md", "exec"), {})
 
 
 def test_examples_quickstart_runs():

@@ -197,3 +197,33 @@ def test_bridge_differential_conformance(name, point):
     got = {k: int(grid[k][0, point, point]) for k in DIFF_COUNTERS}
     want = {k: int(getattr(disp, k)) for k in DIFF_COUNTERS}
     assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Cluster N=1 passthrough: the cluster engine with one core, no shared L2
+# and a non-queueing arbiter must reproduce the single-core engine counters
+# BIT-exactly over the full (capacity x policy incl. OPT x machine) grid —
+# the contract that makes every cluster result a strict superset of the
+# conformance-checked single-core model.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["densenet121_l105", "flashattention2"])
+def test_cluster_n1_passthrough_bit_identity(name):
+    from repro.cluster import ClusterConfig, simulate_cluster_grid
+    sweep = simulator.SweepConfig(
+        np.asarray([c for c, _, _ in CONF_POINTS], np.int32),
+        np.asarray([p for _, p, _ in CONF_POINTS], np.int32),
+        np.zeros(len(CONF_POINTS), bool))
+    machines = simulator.MachineSweep.from_params(
+        [m for _, _, m in CONF_POINTS])
+    single = _sim_grid(name)
+    clus = simulate_cluster_grid(
+        [simulator.prepare(_program(name))], sweep, machines,
+        ClusterConfig.passthrough(1))
+    for k in simulator.COUNTER_NAMES:
+        np.testing.assert_array_equal(clus[k], single[k], err_msg=k)
+    np.testing.assert_array_equal(clus["hit_rate"], single["hit_rate"])
+    np.testing.assert_array_equal(clus["core_cycles_max"], single["cycles"])
+    assert (clus["contention_stalls"] == 0).all()
+    assert (clus["l2_hits"] == 0).all()

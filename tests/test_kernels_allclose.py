@@ -157,6 +157,28 @@ def test_counted_traffic_matches_model_dispersed_and_flash():
     assert fm["materialized"] >= fm["flash"]   # fusing beats spilling S
 
 
+def test_traffic_model_int8_bytes_per_el():
+    """The int8 roofline point's byte accounting: operands at one byte per
+    element (bytes_per_el=1) while the dispersed accumulator spill/fill
+    stays f32-wide; counted == closed form for all three schedules."""
+    m, n, k, bm, bk = 256, 128, 512, 64, 128
+    nm, nk = m // bm, k // bk
+    kw = dict(block_m=bm, block_k=bk, working_set=2, bytes_per_el=1)
+    t = dispersed_gemm.hbm_traffic_model(m, n, k, **kw)
+    assert t["grouped"] == m * k + (nm // 2) * k * n + m * n
+    assert t["dispersed"] == (m * k + k * n) + 2 * m * n * nk * 4
+    assert traffic.count(dispersed_gemm.grouped_schedule(
+        m, n, k, **kw))["total"] == t["grouped"]
+    assert traffic.count(dispersed_gemm.dispersed_schedule(
+        m, n, k, block_m=bm, block_k=bk,
+        bytes_per_el=1))["total"] == t["dispersed"]
+    fm = flash_attention.hbm_traffic_model(
+        1, 2, 128, 128, 64, block_q=64, block_k=64, bytes_per_el=1)
+    fc = traffic.count(flash_attention.flash_schedule(
+        1, 2, 128, 128, 64, block_q=64, block_k=64, bytes_per_el=1))
+    assert fc["total"] == fm["flash"]
+
+
 def test_kernel_shape_errors_name_the_dimension():
     a = _rand(jax.random.PRNGKey(7), (200, 512), jnp.float32)
     b = _rand(jax.random.PRNGKey(8), (512, 128), jnp.float32)
