@@ -15,7 +15,7 @@ PYTEST = PYTHONPATH=$(PYTHONPATH) python -m pytest
 TEST_BUDGET_SECS ?= 900
 
 .PHONY: test-fast test bench bench-smoke serve-smoke roofline-smoke \
-	network-smoke cluster-smoke docs-check
+	network-smoke cluster-smoke dse-smoke docs-check
 
 test-fast:
 	timeout $(TEST_BUDGET_SECS) $(PYTEST) -x -q
@@ -28,7 +28,7 @@ bench:
 
 # Schema guard: the full front door (suites, --kernels subsetting, schema-5
 # JSON with metric metadata) on a 2-kernel subset in a couple of minutes.
-bench-smoke: serve-smoke roofline-smoke network-smoke cluster-smoke
+bench-smoke: serve-smoke roofline-smoke network-smoke cluster-smoke dse-smoke
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 	  --json BENCH_smoke.json --kernels dropout,gemv \
 	  fig2 table3 fig6 fig8 pareto
@@ -57,6 +57,30 @@ cluster-smoke:
 	    == row['cycles'], row; \
 	  print('cluster smoke OK:', r['rows'], 'rows,', x['compiles'], \
 	        'compiles /', x['plan_groups'], 'plan groups, N=1 identity holds')"
+
+# Silicon DSE regression guard: the 3-objective macro-model driver on a
+# reduced grid.  The schema-7 JSON must carry a non-empty front per macro
+# model with the arXiv:2410.08396 external baseline labeled on it, and
+# cluster-engine compiles bounded by the (bucket x geometry x cores) plan
+# groups.
+dse-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+	  --json BENCH_dse_smoke.json --kernels dropout \
+	  --max-events 4000 dse
+	PYTHONPATH=$(PYTHONPATH) python -c "import json; \
+	  rep = json.load(open('BENCH_dse_smoke.json')); \
+	  assert rep['schema'] == 7, rep['schema']; \
+	  assert {'flop', 'sram6t', 'table'} <= set(rep['macro_models']); \
+	  r = rep['suites']['dse']; x = r['extra']; \
+	  assert r['rows'] > 0, r; \
+	  assert x['compiles'] <= x['plan_groups'], x; \
+	  fronts = [x['fronts'][m]['dropout'] for m in ('flop', 'sram6t', 'table')]; \
+	  assert all(fronts), [len(f) for f in fronts]; \
+	  assert all(any(p.get('external') and p['source'] == 'arXiv:2410.08396' \
+	    for p in f) for f in fronts), 'external baseline missing'; \
+	  print('dse smoke OK:', r['rows'], 'rows,', \
+	        [len(f) for f in fronts], 'front points,', x['compiles'], \
+	        'compiles /', x['plan_groups'], 'plan groups')"
 
 # Network-bridge regression guard: whole registry models lowered through
 # repro.bridge on the truncation grid.  The JSON must record >0 rows, the

@@ -33,7 +33,13 @@ axis.  Schema 6 adds the ``cluster_sweep`` suite (``repro.cluster``:
 N lockstep dispersion cores behind a shared L2 + banked memory channels,
 one compile per (bucket, geometry, cores) plan group) with per-point
 cluster counters and iso-SRAM-budget / iso-area Pareto fronts in its
-``extra`` payload.
+``extra`` payload.  Schema 7 adds the ``dse`` suite
+(:mod:`repro.silicon`: pluggable SRAM macro models pricing one capacity
+x L1 x cores grid per silicon backend, 3-objective area/cycles/energy
+fronts with per-point provenance, the arXiv:2410.08396 reduced-register
+RVV design as a labeled external baseline, and the flop -> sram6t
+iso-area winner diff in its ``extra`` payload) plus the top-level
+``macro_models`` catalog naming the silicon every report's areas assume.
 """
 
 from __future__ import annotations
@@ -43,10 +49,10 @@ import json
 import sys
 import time
 
-from repro import api, metrics
+from repro import api, metrics, silicon
 from repro.core import simulator
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 _MODULES = {
     "table3": "benchmarks.table3_speedup",
@@ -64,6 +70,7 @@ _MODULES = {
     "roofline": "benchmarks.roofline",
     "network_sweep": "benchmarks.network_sweep",
     "cluster_sweep": "benchmarks.cluster_sweep",
+    "dse": "benchmarks.dse",
 }
 
 SUITES = tuple(_MODULES)
@@ -135,7 +142,8 @@ def main(argv=None) -> int:
         return 2
     session = api.default_session()
     report = {"schema": SCHEMA_VERSION, "suites": {}, "kernels": {},
-              "metrics": metrics.catalog()}
+              "metrics": metrics.catalog(),
+              "macro_models": silicon.macro_catalog()}
     t00 = time.time()
     for suite in suites:
         mod = __import__(_MODULES[suite], fromlist=["main"])

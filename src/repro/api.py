@@ -625,38 +625,87 @@ class SweepResult:
         r.data[counter] = self.data[counter] / base.data[counter]
         return r
 
-    def pareto(self, x: str, y: str, maximize: tuple = (),
+    def pareto(self, x: str | None = None, y: str | None = None,
+               axes: list | tuple | None = None, maximize: tuple = (),
                **sel) -> list[dict]:
-        """The Pareto front over ``x`` vs ``y`` across every point of the
-        (optionally ``select``-narrowed) grid.  Both axes are minimized
-        unless named in ``maximize``; ``x``/``y`` may be counters or
-        registered non-relational metrics (derived on demand).  Returns
-        the non-dominated points as label rows (axis labels expanded, plus
-        the two objective values), sorted by ascending ``x``."""
+        """The maximal (non-dominated) front over N objectives across every
+        point of the (optionally ``select``-narrowed) grid.
+
+        Objectives come either as the classic two-objective sugar
+        ``pareto(x, y)`` or as ``pareto(axes=["area", "cycles",
+        "energy"])`` — the two forms are exclusive and ``pareto(x, y)``
+        is exactly ``pareto(axes=[x, y])``.  Every objective is minimized
+        unless named in ``maximize``; objectives may be counters or
+        registered non-relational metrics (derived on demand).  A point is
+        dominated when some other point is no worse on every objective and
+        strictly better on at least one; exact ties on all objectives keep
+        both points (so duplicates survive, as in the original
+        two-objective implementation).
+
+        Dominance is resolved with a lexicographic sort + incremental
+        front (only lexicographically earlier points can dominate, and any
+        dominator is itself dominated only by earlier front members), so
+        the scan is one vectorized comparison per point against the
+        growing front instead of the old all-pairs Python loop.
+
+        Returns the non-dominated points as label rows (axis labels
+        expanded, plus the objective values), sorted ascending by the
+        tuple of raw objective values (for two objectives: ascending
+        ``x``, then ``y`` — the original ordering).
+        """
+        if axes is None:
+            if x is None or y is None:
+                raise TypeError(
+                    "pareto needs either positional x and y or "
+                    "axes=[obj1, obj2, ...]")
+            objectives = [x, y]
+        else:
+            if x is not None or y is not None:
+                raise TypeError("pass either (x, y) or axes=, not both")
+            objectives = list(axes)
+        if len(objectives) < 2:
+            raise ValueError(
+                f"pareto needs at least 2 objectives, got {objectives!r}")
+        if isinstance(maximize, str):
+            maximize = (maximize,)
+        unknown = sorted(set(maximize) - set(objectives))
+        if unknown:
+            raise ValueError(
+                f"maximize names {unknown} are not objectives "
+                f"{objectives}")
         r = self.select(**sel) if sel else self
-        for m in (x, y):
+        for m in objectives:
             if m not in r.data:
                 r = r.derive(m)
-        xs = np.asarray(r.data[x], np.float64)
-        ys = np.asarray(r.data[y], np.float64)
-        sx = -1.0 if x in maximize else 1.0
-        sy = -1.0 if y in maximize else 1.0
-        idxs = list(np.ndindex(*r.shape))
-        pts = [(sx * xs[i], sy * ys[i]) for i in idxs]
+        vals = np.stack([np.asarray(r.data[m], np.float64).ravel()
+                         for m in objectives])          # (N_obj, K) raw
+        signs = np.array([-1.0 if m in maximize else 1.0
+                          for m in objectives])
+        obj = vals * signs[:, None]                     # minimize all
+        npts = obj.shape[1]
+        # lexsort's last key is primary -> sort by obj0, then obj1, ...
+        order = np.lexsort(obj[::-1])
+        fv = np.empty((npts, len(objectives)))
+        nf = 0
         front = []
-        for i, (xi, yi) in enumerate(pts):
-            dominated = any(
-                (xj <= xi and yj <= yi) and (xj < xi or yj < yi)
-                for j, (xj, yj) in enumerate(pts) if j != i)
-            if not dominated:
-                front.append(i)
+        for k in order:
+            p = obj[:, k]
+            if nf:
+                le = (fv[:nf] <= p).all(axis=1)
+                lt = (fv[:nf] < p).any(axis=1)
+                if bool(np.any(le & lt)):
+                    continue
+            fv[nf] = p
+            nf += 1
+            front.append(int(k))
         rows = []
-        for i in front:
-            row = r._labels(idxs[i])
-            row[x] = xs[idxs[i]].item()
-            row[y] = ys[idxs[i]].item()
+        for k in front:
+            idx = tuple(int(v) for v in np.unravel_index(k, r.shape))
+            row = r._labels(idx)
+            for oi, m in enumerate(objectives):
+                row[m] = vals[oi, k].item()
             rows.append(row)
-        rows.sort(key=lambda rr: (rr[x], rr[y]))
+        rows.sort(key=lambda rr: tuple(rr[m] for m in objectives))
         return rows
 
 

@@ -60,12 +60,12 @@ SCALAR_AU = 572749.0                 # L31 scalar core incl. FPU + 2 RFs
 # decoders/sense-amps/redundancy are in (the periphery constant below).
 # The paper gives no absolute um^2 for its flop VRF, only ratios, so the
 # calibrated REG_AU_PER_BIT fixes the au scale; a flop + mux/clock load
-# in 28 nm is ~4x a 6T bitcell in drawn area, hence the /4.  TODO(cal):
-# replace with an OpenRAM-style per-geometry macro curve (ROADMAP
-# "calibrated silicon backend") if a measured 28 nm macro datapoint
-# lands in PAPERS.md; until then all iso-area comparisons share this one
-# constant, so *relative* cluster trade-offs are unaffected by its
-# absolute calibration.
+# in 28 nm is ~4x a 6T bitcell in drawn area, hence the /4.  The old
+# TODO(cal) is closed by ``repro.silicon``: these two constants are now
+# the pinned derivation of the default ``flop`` macro model (bit-identical
+# to this closed form), and per-geometry OpenRAM-style curves
+# (``sram6t`` / ``table``) are swappable behind ``l1_sram_area(macro=)``
+# and the ``macro_model`` parameter of the area/energy metrics.
 SRAM_AU_PER_BIT = REG_AU_PER_BIT / 4.0
 SRAM_PERIPHERY_AU = 9000.0           # decoders + sense amps + tag array
 
@@ -130,9 +130,21 @@ def cpu_area_grid(n_vregs, vlen_bits: int = VLEN, n_lanes: int = 8,
                 total=vpu + scalar)
 
 
-def l1_sram_area(sets, ways, line_bytes: int = 32):
+def l1_sram_area(sets, ways, line_bytes: int = 32, macro=None):
     """L1 data-cache macro area (beyond-paper; excluded from Fig 2/7).
-    Vectorized over ``sets``/``ways`` arrays."""
+    Vectorized over ``sets``/``ways`` arrays.
+
+    ``macro`` selects a :mod:`repro.silicon` macro model (a registry name
+    or a ``MacroModel`` instance) pricing the ``sets * ways`` lines x
+    ``line_bytes * 8``-bit geometry; ``None`` keeps the legacy closed
+    form, which IS the ``flop`` backend (bit-identical, pinned in
+    ``tests/test_silicon.py``)."""
+    if macro is not None:
+        from repro import silicon   # lazy: silicon sits above the core
+        model = silicon.get_macro_model(macro)
+        return model.area(
+            np.asarray(sets, np.int64) * np.asarray(ways, np.int64),
+            line_bytes * 8)
     bits = np.asarray(sets, np.int64) * np.asarray(ways, np.int64) \
         * (line_bytes * 8)
     return bits * SRAM_AU_PER_BIT + SRAM_PERIPHERY_AU

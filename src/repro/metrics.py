@@ -72,6 +72,23 @@ class Metric:
 
 _REGISTRY: dict[str, Metric] = {}
 
+_PLUGINS_LOADED = False
+
+
+def _load_plugins() -> None:
+    """Import the metric-registering plugin packages exactly once.
+
+    ``repro.silicon`` registers its macro-calibrated metrics
+    (``silicon_area``, ``silicon_energy``, ...) through :func:`register`
+    at import time — the no-core-edit extension path.  The import is lazy
+    (first unknown-name lookup or catalog dump) so ``repro.metrics``
+    itself stays importable from the core without the plugin layers."""
+    global _PLUGINS_LOADED
+    if _PLUGINS_LOADED:
+        return
+    _PLUGINS_LOADED = True
+    import repro.silicon  # noqa: F401  (registers its metrics)
+
 
 def register(name: str, kind: str, doc: str = "", override: bool = False,
              params: tuple | None = None):
@@ -107,18 +124,24 @@ def get(metric) -> Metric:
     try:
         return _REGISTRY[metric]
     except KeyError:
-        raise KeyError(
-            f"unknown metric {metric!r}; registered: "
-            f"{', '.join(sorted(_REGISTRY))}") from None
+        _load_plugins()
+        try:
+            return _REGISTRY[metric]
+        except KeyError:
+            raise KeyError(
+                f"unknown metric {metric!r}; registered: "
+                f"{', '.join(sorted(_REGISTRY))}") from None
 
 
 def names() -> list[str]:
     """Sorted names of every registered metric."""
+    _load_plugins()
     return sorted(_REGISTRY)
 
 
 def catalog() -> dict[str, dict]:
     """JSON-safe registry dump: name -> {kind, doc} (for ``run.py --json``)."""
+    _load_plugins()
     return {n: dict(kind=m.kind, doc=m.doc.strip().splitlines()[0]
                     if m.doc.strip() else "")
             for n, m in sorted(_REGISTRY.items())}
@@ -353,11 +376,14 @@ def _total_area(ctx):
 
 @register("area_with_l1", "model",
           "total_area plus the L1 data-cache SRAM macro from the sweep's "
-          "l1_geometry axis — the Pareto-frontier area axis",
-          params=("dispersed", "n_lanes"))
+          "l1_geometry axis — the Pareto-frontier area axis; macro_model "
+          "selects a repro.silicon backend (None = legacy constants, "
+          "which the 'flop' backend reproduces bit-identically)",
+          params=("dispersed", "n_lanes", "macro_model"))
 def _area_with_l1(ctx):
     sram = costmodel.l1_sram_area(ctx.axis_grid("l1_sets"),
-                                  ctx.axis_grid("l1_ways"))
+                                  ctx.axis_grid("l1_ways"),
+                                  macro=ctx.params.get("macro_model"))
     return ctx.counter("total_area") + sram
 
 
@@ -473,12 +499,21 @@ def _cluster_meta(ctx) -> dict:
 
 @register("cluster_area", "model",
           "whole-cluster area (au): cores * (CPU+VPU logic + L1 macro) "
-          "plus the shared-L2 SRAM macro from meta['cluster']",
-          params=("dispersed", "n_lanes"))
+          "plus the shared-L2 SRAM macro from meta['cluster']; "
+          "macro_model prices both macros through a repro.silicon "
+          "backend (None = legacy constants)",
+          params=("dispersed", "n_lanes", "macro_model"))
 def _cluster_area(ctx):
     cl = _cluster_meta(ctx)
-    l2_au = cl["l2_bytes"] * 8 * costmodel.SRAM_AU_PER_BIT \
-        + (costmodel.SRAM_PERIPHERY_AU if cl["l2_bytes"] else 0.0)
+    macro = ctx.params.get("macro_model")
+    if macro is not None:
+        from repro import silicon  # lazy: plugin layer above the core
+        model = silicon.get_macro_model(macro)
+        l2_au = float(model.area(cl["l2_sets"] * cl["l2_ways"], 32 * 8)) \
+            if cl["l2_bytes"] else 0.0
+    else:
+        l2_au = cl["l2_bytes"] * 8 * costmodel.SRAM_AU_PER_BIT \
+            + (costmodel.SRAM_PERIPHERY_AU if cl["l2_bytes"] else 0.0)
     return ctx.axis_grid("cores") * ctx.counter("area_with_l1") + l2_au
 
 

@@ -1,0 +1,30 @@
+"""Calibrated silicon backend: pluggable SRAM macro models + the metrics
+that let any sweep re-price its area/energy axes per backend.
+
+``repro.silicon`` is the layer between the cost model and the sweep front
+door the ROADMAP's "calibrated silicon backend" item asked for: a
+:class:`MacroModel` protocol (area / access energy / leakage as functions
+of a words x bits x banks geometry), a registry with three backends
+(``flop`` — the legacy flop-derived constants, bit-identical default;
+``sram6t`` — an OpenRAM-style analytic 6T curve with edge-scaled
+periphery; ``table`` — interpolated from published datapoints, exact at
+its anchors), and macro-parameterised metrics (``silicon_area``,
+``silicon_cluster_area``, ``silicon_energy``, ``silicon_edp``) registered
+through :func:`repro.metrics.register` with no core-engine edits.  See
+``docs/silicon.md`` and ``benchmarks/dse.py`` (the 3-objective DSE driver
+built on top).
+"""
+
+from repro.silicon.models import (AU_PER_UM2, BITCELL_UM2,
+                                  DEFAULT_MACRO_MODEL, FlopMacroModel,
+                                  MacroModel, Sram6TMacroModel,
+                                  TableMacroModel, get_macro_model,
+                                  macro_catalog, macro_model_names,
+                                  register_macro_model)
+from repro.silicon import metrics as _macro_metrics  # noqa: F401  (registers)
+
+__all__ = [
+    "AU_PER_UM2", "BITCELL_UM2", "DEFAULT_MACRO_MODEL", "FlopMacroModel",
+    "MacroModel", "Sram6TMacroModel", "TableMacroModel", "get_macro_model",
+    "macro_catalog", "macro_model_names", "register_macro_model",
+]

@@ -42,8 +42,9 @@ def test_suite_produces_rows(mod, kw):
 
 
 def test_run_json_schema(tmp_path):
-    """The front door's --json report: schema 6, --kernels subsetting, the
-    metric-registry catalog, and per-sweep derived-metric metadata."""
+    """The front door's --json report: schema 7, --kernels subsetting, the
+    metric-registry catalog (incl. the macro-model catalog), and per-sweep
+    derived-metric metadata."""
     import json
 
     from benchmarks import run as runner
@@ -52,7 +53,9 @@ def test_run_json_schema(tmp_path):
                       "--max-events", "12000", "fig2", "fig6"])
     assert rc == 0
     rep = json.loads(out.read_text())
-    assert rep["schema"] == 6
+    assert rep["schema"] == 7
+    assert set(rep["macro_models"]) >= {"flop", "sram6t", "table"}
+    assert rep["metrics"]["silicon_area"]["kind"] == "model"
     assert rep["metrics"]["speedup"]["kind"] == "relational"
     assert rep["metrics"]["application_power"]["kind"] == "model"
     fig6 = rep["suites"]["fig6"]

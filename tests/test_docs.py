@@ -29,7 +29,8 @@ def test_readme_quickstart_block_executes():
 
 def test_docs_pages_exist():
     for page in ("api.md", "architecture.md", "bridge.md", "cluster.md",
-                 "folding.md", "kernels.md", "metrics.md", "serving.md"):
+                 "folding.md", "kernels.md", "metrics.md", "serving.md",
+                 "silicon.md"):
         text = (ROOT / "docs" / page).read_text()
         assert len(text) > 500, page
 
@@ -67,6 +68,13 @@ def test_cluster_doc_blocks_execute():
     assert blocks, "docs/cluster.md lost its ```python sweep example"
     for block in blocks:
         exec(compile(block, "docs/cluster.md", "exec"), {})
+
+
+def test_silicon_doc_blocks_execute():
+    blocks = _python_blocks(ROOT / "docs" / "silicon.md")
+    assert blocks, "docs/silicon.md lost its ```python macro-model examples"
+    for block in blocks:
+        exec(compile(block, "docs/silicon.md", "exec"), {})
 
 
 def test_examples_quickstart_runs():

@@ -1,0 +1,395 @@
+"""The silicon macro-model layer: flop-backend bit-identity with the
+legacy closed forms (the SRAM_AU_PER_BIT regression pin), macro-model
+laws (monotonicity, table anchors, registry discipline), the N-objective
+pareto (old-vs-new equality, 2-obj fronts inside 3-obj projections), and
+the DSE driver's front/baseline/winner-flip contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api, metrics, silicon
+from repro.core import costmodel, policies
+
+# ---------------------------------------------------------------------------
+# Toy grids (test_metrics.toy_result, plus L1-geometry / cores axes so the
+# macro models have something to vary over).
+# ---------------------------------------------------------------------------
+
+GEOMETRIES = tuple(api.L1Geometry.from_kbytes(kb) for kb in (4, 8, 16))
+
+
+def toy_result(cores=None) -> api.SweepResult:
+    axes = [
+        api.Axis("kernel", ("a", "b")),
+        api.Axis("capacity", (8, 32)),
+        api.Axis("policy", (policies.FIFO,)),
+        api.Axis("alloc_no_fetch", (False,)),
+        api.Axis("l1_geometry", GEOMETRIES),
+        api.Axis("mem_latency", (5,)),
+        api.Axis("l1_hit_cycles", (0,)),
+        api.Axis("uop_hit_cycles", (1,)),
+    ]
+    meta = dict(kernel_params="paper")
+    if cores is not None:
+        axes.append(api.Axis("cores", tuple(cores)))
+        meta["cluster"] = dict(l2_sets=256, l2_ways=4,
+                               l2_bytes=256 * 4 * 32, mem_channels=2,
+                               l2_hit_cycles=2)
+    axes = tuple(axes)
+    shape = tuple(len(a) for a in axes)
+
+    def grid(a_vals, b_vals):
+        base = np.asarray([a_vals, b_vals], np.int64)
+        ext = base.reshape((2, 2) + (1,) * (len(shape) - 2))
+        return (ext * np.ones(shape, np.int64))
+
+    data = dict(
+        cycles=grid([200, 100], [400, 400]),
+        stall_cycles=grid([50, 0], [100, 100]),
+        spills=grid([4, 0], [8, 0]),
+        fills=grid([6, 0], [2, 0]),
+        l1_hits=grid([10, 10], [20, 20]),
+        l1_misses=grid([2, 2], [4, 4]),
+        reg_reads=grid([30, 30], [60, 60]),
+        reg_writes=grid([10, 10], [20, 20]),
+        mem_reads=grid([2, 2], [4, 4]),
+        mem_writes=grid([1, 1], [2, 2]),
+        vrf_hits=grid([90, 100], [180, 200]),
+        vrf_misses=grid([10, 0], [20, 0]),
+    )
+    data["hit_rate"] = data["vrf_hits"] / (data["vrf_hits"]
+                                           + data["vrf_misses"])
+    data["event_scale"] = np.full(shape, 1.0)
+    data["fold_exact"] = np.ones(shape, bool)
+    return api.SweepResult(axes, data, meta)
+
+
+WORDS = np.array([64, 128, 256, 512, 1024, 4096])   # 2 KB .. 128 KB lines
+BITS = 256
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: the flop backend IS the legacy constant (bit-identity pins).
+# ---------------------------------------------------------------------------
+
+
+def test_flop_l1_sram_area_bit_identical():
+    sets = np.array([[64], [128], [256], [512]])
+    ways = np.array([[1, 2, 4, 8]])
+    legacy = costmodel.l1_sram_area(sets, ways)
+    for macro in ("flop", silicon.get_macro_model("flop")):
+        np.testing.assert_array_equal(
+            costmodel.l1_sram_area(sets, ways, macro=macro), legacy)
+
+
+def test_flop_area_with_l1_grid_bit_identical():
+    res = toy_result()
+    legacy = res.derive("area_with_l1")
+    flop = res.derive("area_with_l1", macro_model="flop", out="a2")
+    sil = res.derive("silicon_area", macro_model="flop", out="a3")
+    sil_default = res.derive("silicon_area", out="a4")   # flop is default
+    np.testing.assert_array_equal(flop.data["a2"],
+                                  legacy.data["area_with_l1"])
+    np.testing.assert_array_equal(sil.data["a3"],
+                                  legacy.data["area_with_l1"])
+    np.testing.assert_array_equal(sil_default.data["a4"],
+                                  legacy.data["area_with_l1"])
+
+
+def test_flop_cluster_area_grid_bit_identical():
+    res = toy_result(cores=(1, 2, 4))
+    legacy = res.derive("cluster_area")
+    flop = res.derive("cluster_area", macro_model="flop", out="c2")
+    sil = res.derive("silicon_cluster_area", macro_model="flop", out="c3")
+    np.testing.assert_array_equal(flop.data["c2"],
+                                  legacy.data["cluster_area"])
+    np.testing.assert_array_equal(sil.data["c3"],
+                                  legacy.data["cluster_area"])
+
+
+def test_flop_energy_is_legacy_energy_plus_l1_leakage():
+    """silicon_energy under flop re-prices the flat L1 access energy by
+    itself (a no-op) and adds only the L1 macro leakage the core power
+    model never charged."""
+    res = toy_result()
+    r = res.derive("energy").derive("silicon_energy", out="se")
+    model = silicon.get_macro_model("flop")
+    words = np.asarray([g.sets * g.ways for g in GEOMETRIES]) \
+        .reshape((1, 1, 1, 1, 3, 1, 1, 1))
+    leak = model.leakage(words, 256) * r.data["scaled_cycles"]
+    np.testing.assert_allclose(r.data["se"], r.data["energy"] + leak,
+                               rtol=1e-12)
+
+
+def test_macro_access_energy_flop_is_flat_legacy():
+    res = toy_result()
+    r = res.derive("l1_macro_access_energy", out="e")
+    np.testing.assert_array_equal(
+        r.data["e"], np.full(r.shape, costmodel.DEFAULT_POWER.e_l1_access))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: macro-model laws.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ("flop", "sram6t", "table"))
+def test_area_energy_monotone_in_capacity(name):
+    m = silicon.get_macro_model(name)
+    area = np.asarray(m.area(WORDS, BITS), np.float64)
+    energy = np.asarray(m.access_energy(WORDS, BITS), np.float64)
+    leak = np.asarray(m.leakage(WORDS, BITS), np.float64)
+    assert (np.diff(area) > 0).all(), f"{name} area not increasing"
+    assert (np.diff(energy) >= 0).all(), f"{name} energy decreasing"
+    assert (np.diff(leak) > 0).all(), f"{name} leakage not increasing"
+
+
+def test_table_exact_at_anchors():
+    m = silicon.get_macro_model("table")
+    for total_bits, area, energy, leak in m.points:
+        words = int(total_bits) // BITS
+        assert float(m.area(words, BITS)) == area
+        assert float(m.access_energy(words, BITS)) == energy
+        assert float(m.leakage(words, BITS)) == leak
+    # outside the anchor range the edge values clamp (no extrapolation)
+    lo, hi = m.points[0], m.points[-1]
+    assert float(m.area(int(lo[0]) // BITS // 4, BITS)) == lo[1]
+    assert float(m.area(int(hi[0]) // BITS * 4, BITS)) == hi[1]
+
+
+def test_sram6t_curve_shape():
+    """Small macros are relatively more expensive than under flop, and the
+    overhead ratio shrinks with size (the macro-efficiency curve); access
+    energy meets the legacy flat 12.0 at the 16 KB reference macro."""
+    flop = silicon.get_macro_model("flop")
+    s6t = silicon.get_macro_model("sram6t")
+    ratio = np.asarray(s6t.area(WORDS, BITS) / flop.area(WORDS, BITS))
+    assert (ratio > 1.0).all()
+    assert (np.diff(ratio) < 0).all()
+    assert float(s6t.access_energy(512, BITS)) == pytest.approx(12.0,
+                                                                abs=0.01)
+
+
+def test_banks_split_geometry():
+    s6t = silicon.get_macro_model("sram6t")
+    one = float(s6t.area(1024, BITS, banks=1))
+    four = float(s6t.area(1024, BITS, banks=4))
+    assert four > one            # 4x periphery on the same bits
+    # a bank access touches a quarter of the bits -> cheaper access
+    assert float(s6t.access_energy(1024, BITS, banks=4)) \
+        < float(s6t.access_energy(1024, BITS, banks=1))
+    with pytest.raises(ValueError, match="banks must be >= 1"):
+        s6t.area(1024, BITS, banks=0)
+
+
+def test_registry_discipline():
+    assert silicon.macro_model_names() == ["flop", "sram6t", "table"]
+    with pytest.raises(ValueError, match="registered twice"):
+        silicon.register_macro_model(silicon.FlopMacroModel())
+    with pytest.raises(KeyError, match="unknown macro model.*sram6t"):
+        silicon.get_macro_model("nope")
+    with pytest.raises(TypeError, match="MacroModel"):
+        silicon.get_macro_model(42)
+    # instances pass through; custom models register and resolve
+    from repro.silicon import models as silicon_models
+    m = silicon.Sram6TMacroModel(name="test_custom", fixed_au=1.0)
+    assert silicon.get_macro_model(m) is m
+    silicon.register_macro_model(m)
+    try:
+        assert silicon.get_macro_model("test_custom") is m
+        res = toy_result().derive("l1_macro_area",
+                                  macro_model="test_custom", out="a")
+        assert np.isfinite(res.data["a"]).all()
+    finally:
+        silicon_models._MACRO_REGISTRY.pop("test_custom")
+    with pytest.raises(ValueError, match=">= 2 anchor"):
+        silicon.TableMacroModel("t", ((1024, 1.0, 1.0, 1.0),))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        silicon.TableMacroModel("t", ((2048, 1.0, 1.0, 1.0),
+                                      (1024, 1.0, 1.0, 1.0)))
+
+
+def test_metrics_lazy_plugin_load():
+    """A fresh process that never imports repro.silicon still resolves the
+    silicon metrics through the registry's lazy plugin load."""
+    import subprocess
+    import sys
+    code = ("import sys; assert 'repro.silicon' not in sys.modules; "
+            "from repro import metrics; "
+            "m = metrics.get('silicon_area'); assert m.kind == 'model'; "
+            "assert 'silicon_energy' in metrics.catalog()")
+    subprocess.run([sys.executable, "-c", code], check=True)
+
+
+def test_macro_catalog_json_safe():
+    import json
+    cat = silicon.macro_catalog()
+    assert set(cat) == {"flop", "sram6t", "table"}
+    ref = costmodel.l1_sram_area(256, 2)     # 512-line (16 KB) reference
+    assert cat["flop"]["area_au"] == float(ref)
+    json.dumps(cat)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: the N-objective pareto — old-vs-new equality + projections.
+# ---------------------------------------------------------------------------
+
+
+def brute_force_pareto(res, x, y, maximize=(), **sel):
+    """The original O(n^2) two-objective implementation, verbatim, as the
+    reference the vectorized path must reproduce exactly."""
+    r = res.select(**sel) if sel else res
+    for m in (x, y):
+        if m not in r.data:
+            r = r.derive(m)
+    xs = np.asarray(r.data[x], np.float64)
+    ys = np.asarray(r.data[y], np.float64)
+    sx = -1.0 if x in maximize else 1.0
+    sy = -1.0 if y in maximize else 1.0
+    idxs = list(np.ndindex(*r.shape))
+    pts = [(sx * xs[i], sy * ys[i]) for i in idxs]
+    front = []
+    for i, (xi, yi) in enumerate(pts):
+        dominated = any(
+            (xj <= xi and yj <= yi) and (xj < xi or yj < yi)
+            for j, (xj, yj) in enumerate(pts) if j != i)
+        if not dominated:
+            front.append(i)
+    rows = []
+    for i in front:
+        row = r._labels(idxs[i])
+        row[x] = xs[idxs[i]].item()
+        row[y] = ys[idxs[i]].item()
+        rows.append(row)
+    rows.sort(key=lambda rr: (rr[x], rr[y]))
+    return rows
+
+
+def test_pareto_old_vs_new_on_benchmark_grid():
+    """Exact old-vs-new front equality on the Pareto-frontier benchmark's
+    objectives (area_with_l1 x scaled_cycles over capacity x L1)."""
+    res = toy_result()
+    old = brute_force_pareto(res, "area_with_l1", "scaled_cycles")
+    new = res.pareto("area_with_l1", "scaled_cycles")
+    assert old == new
+    old_m = brute_force_pareto(res, "area_with_l1", "hit_rate",
+                               maximize=("hit_rate",), kernel="a")
+    new_m = res.pareto("area_with_l1", "hit_rate",
+                       maximize=("hit_rate",), kernel="a")
+    assert old_m == new_m
+
+
+def test_pareto_old_vs_new_randomized():
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        n, m = int(rng.integers(2, 7)), int(rng.integers(2, 7))
+        res = api.SweepResult(
+            (api.Axis("i", tuple(range(n))), api.Axis("j", tuple(range(m)))),
+            dict(a=rng.integers(0, 5, (n, m)).astype(float),   # many ties
+                 b=rng.integers(0, 5, (n, m)).astype(float)),
+            {})
+        for mx in ((), ("a",), ("b",), ("a", "b")):
+            assert brute_force_pareto(res, "a", "b", mx) \
+                == res.pareto("a", "b", maximize=mx)
+
+
+def test_pareto_n_objective_projection():
+    """Every 2-objective front is a subset of the 3-objective front's
+    projection (on objective-value pairs; a third objective can only save
+    points from domination, never dominate new ones)."""
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        res = api.SweepResult(
+            (api.Axis("i", tuple(range(5))), api.Axis("j", tuple(range(6)))),
+            {k: rng.integers(0, 5, (5, 6)).astype(float)
+             for k in ("a", "b", "c")},
+            {})
+        f3 = {(r["a"], r["b"], r["c"])
+              for r in res.pareto(axes=["a", "b", "c"])}
+        for pair in (("a", "b"), ("a", "c"), ("b", "c")):
+            f2 = {tuple(r[k] for k in pair) for r in res.pareto(*pair)}
+            proj = {tuple(p[("a", "b", "c").index(k)] for k in pair)
+                    for p in f3}
+            assert f2 <= proj, (pair, f2 - proj)
+
+
+def test_pareto_n_objective_api():
+    res = toy_result()
+    two = res.pareto("area_with_l1", "scaled_cycles")
+    sugar = res.pareto(axes=["area_with_l1", "scaled_cycles"])
+    assert two == sugar
+    three = res.pareto(axes=["area_with_l1", "scaled_cycles", "energy"])
+    assert len(three) >= len(two)
+    for row in three:
+        assert {"area_with_l1", "scaled_cycles", "energy"} <= set(row)
+    with pytest.raises(TypeError, match="either positional"):
+        res.pareto("area_with_l1")
+    with pytest.raises(TypeError, match="not both"):
+        res.pareto("a", "b", axes=["a", "b"])
+    with pytest.raises(ValueError, match="at least 2"):
+        res.pareto(axes=["area_with_l1"])
+    with pytest.raises(ValueError, match="not objectives"):
+        res.pareto(axes=["area_with_l1", "scaled_cycles"],
+                   maximize=("nope",))
+
+
+# ---------------------------------------------------------------------------
+# The DSE driver: fronts, provenance, external baseline, winner flip.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dse_extra():
+    from benchmarks import dse
+    dse.run(names=("dropout",), cores=(1,), kernel_params="paper",
+            max_events=4000)
+    return dse.json_extra()
+
+
+def test_dse_front_contract(dse_extra):
+    e = dse_extra
+    assert e["points"] > 0 and e["compiles"] <= e["plan_groups"]
+    for model in ("flop", "sram6t", "table"):
+        front = e["fronts"][model]["dropout"]
+        interior = [r for r in front if not r.get("external")]
+        assert interior, f"{model}: empty front"
+        for r in interior:
+            # provenance: macro model, geometry, fold cert, plan group
+            assert r["macro_model"] == model
+            assert {"cores", "capacity", "l1_kb", "l1_geometry",
+                    "fold_exact", "plan_group", "bucket",
+                    "silicon_cluster_area", "scaled_cycles",
+                    "silicon_energy"} <= set(r)
+        ext = [r for r in front if r.get("external")]
+        assert len(ext) == 1 and ext[0]["source"] == "arXiv:2410.08396"
+        assert ext[0]["capacity"] == 16 and not ext[0]["dispersed"]
+
+
+def test_dse_2obj_front_inside_3obj_projection(dse_extra):
+    for model in ("flop", "sram6t", "table"):
+        f3 = {(r["silicon_cluster_area"], r["scaled_cycles"])
+              for r in dse_extra["fronts"][model]["dropout"]
+              if not r.get("external")}
+        f2 = {(r["silicon_cluster_area"], r["scaled_cycles"])
+              for r in dse_extra["fronts_2d"][model]["dropout"]}
+        assert f2 <= f3, (model, f2 - f3)
+
+
+def test_dse_winner_flip(dse_extra):
+    """The acceptance criterion: switching flop -> sram6t changes the
+    iso-area winner set (edge-scaled periphery reorders small-L1 full-VRF
+    vs big-L1 dispersed configurations)."""
+    per = dse_extra["iso_area_winners"]["dropout"]
+    assert per["flop"] != per["sram6t"]
+    assert per["changed"]
+
+
+def test_dse_baseline_priced_per_model(dse_extra):
+    areas = {m: dse_extra["external_baseline"][m]["dropout"]
+             ["silicon_cluster_area"] for m in ("flop", "sram6t", "table")}
+    assert areas["sram6t"] != areas["flop"]
+    # logic area is shared; only the macro pricing moves the point
+    cyc = {m: dse_extra["external_baseline"][m]["dropout"]["scaled_cycles"]
+           for m in areas}
+    assert len(set(cyc.values())) == 1
